@@ -1,0 +1,35 @@
+"""Shared benchmark fixtures: the Alibaba statistical twin + indexes,
+built once and cached across benchmark modules."""
+
+from __future__ import annotations
+
+import functools
+import time
+
+from repro.core import paa
+from repro.graph.generators import alibaba_like
+
+
+@functools.lru_cache(maxsize=1)
+def twin():
+    g = alibaba_like()
+    return g
+
+
+@functools.lru_cache(maxsize=1)
+def twin_index():
+    return paa.HostIndex(twin())
+
+
+@functools.lru_cache(maxsize=1)
+def twin_device():
+    return paa.device_form(twin())
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6  # µs

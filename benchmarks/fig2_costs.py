@@ -1,0 +1,42 @@
+"""Figure 2: broadcast/unicast data transferred by S1 vs S2 per query
+(mean + max over valid start nodes; S1 is start-independent)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import twin, twin_index
+from repro.core import paa, strategies
+from repro.core import regex as rx
+from repro.graph.generators import TABLE2_QUERIES
+
+
+def run(max_starts: int = 120) -> list[str]:
+    g = twin()
+    index = twin_index()
+    rows = [
+        "fig2,query,s1_bc,s1_uc,s2_bc_mean,s2_bc_max,s2_uc_mean,s2_uc_max,"
+        "s1_frac_of_graph,s2_frac_of_graph_mean"
+    ]
+    total_syms = 3 * g.n_edges
+    for name, q in TABLE2_QUERIES.items():
+        ast = rx.parse(q)
+        ca = paa.compile_query(q, g)
+        starts = paa.valid_start_nodes(ca, g)[:max_starts]
+        s1 = strategies.s1_costs(ast, g)
+        bc, uc = [], []
+        for s in starts:
+            c = strategies.s2_costs(ca, index, int(s))
+            bc.append(c.broadcast_symbols)
+            uc.append(c.unicast_symbols)
+        bc, uc = np.array(bc), np.array(uc)
+        rows.append(
+            f"fig2,{name},{s1.broadcast_symbols:.0f},{s1.unicast_symbols:.0f},"
+            f"{bc.mean():.1f},{bc.max():.0f},{uc.mean():.1f},{uc.max():.0f},"
+            f"{s1.unicast_symbols / total_syms:.4f},{uc.mean() / total_syms:.6f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,46 @@
+"""Figure 3 / Eq. 3: optimality regions of S1 vs S2 in the (k, d) plane,
+plus the paper's §4.5 census: how many single-source queries have S2
+necessarily optimal vs parameter-dependent."""
+
+from __future__ import annotations
+
+from benchmarks.common import twin, twin_index
+from repro.core import cost_model, paa, strategies
+from repro.core import regex as rx
+from repro.graph.generators import TABLE2_QUERIES
+
+
+def run(max_starts: int = 60) -> list[str]:
+    g = twin()
+    index = twin_index()
+    rows = ["fig3,query,start_census,s2_always,param_dependent,s1_always"]
+    total = {"s2_always": 0, "dep": 0, "s1_always": 0}
+    for name, q in TABLE2_QUERIES.items():
+        ast = rx.parse(q)
+        ca = paa.compile_query(q, g)
+        s1 = strategies.s1_costs(ast, g)
+        counts = {"s2_always": 0, "dep": 0, "s1_always": 0}
+        starts = paa.valid_start_nodes(ca, g)[:max_starts]
+        for s in starts:
+            s2 = strategies.s2_costs(ca, index, int(s))
+            disc = cost_model.discriminant(
+                s1.broadcast_symbols, s1.unicast_symbols,
+                s2.broadcast_symbols, s2.unicast_symbols,
+            )
+            if disc == -float("inf") or s2.broadcast_symbols <= s1.broadcast_symbols:
+                counts["s2_always"] += 1
+            elif disc > 1.0:
+                counts["s1_always"] += 1
+            else:
+                counts["dep"] += 1
+        for k in total:
+            total[k] += counts[k]
+        rows.append(
+            f"fig3,{name},{len(starts)},{counts['s2_always']},{counts['dep']},{counts['s1_always']}"
+        )
+    rows.append(f"fig3,TOTAL,,{total['s2_always']},{total['dep']},{total['s1_always']}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

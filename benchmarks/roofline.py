@@ -1,0 +1,38 @@
+"""Roofline aggregation: reads dryrun_results.json and prints the
+per-(arch × shape × mesh) three-term roofline table (§Roofline)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+
+def run(path: str = "dryrun_results.json") -> list[str]:
+    if not os.path.exists(path):
+        return ["roofline,SKIPPED (run `python -m repro.launch.dryrun --mesh both` first)"]
+    with open(path) as f:
+        results = json.load(f)
+    rows = [
+        "roofline,arch,shape,mesh,ok,peak_GiB_dev,compute_ms,memory_ms,"
+        "collective_ms,bottleneck,useful_flops_ratio"
+    ]
+    for key in sorted(results):
+        r = results[key]
+        arch, shape, mesh = key.split("|")
+        if not r.get("ok"):
+            rows.append(f"roofline,{arch},{shape},{mesh},FAIL,,,,,{r.get('error','')[:60]},")
+            continue
+        roof = r["roofline"]
+        ufr = r.get("useful_flops_ratio")
+        rows.append(
+            f"roofline,{arch},{shape},{mesh},ok,"
+            f"{r['memory']['peak_estimate_bytes'] / 2**30:.2f},"
+            f"{roof['compute_s'] * 1e3:.2f},{roof['memory_s'] * 1e3:.2f},"
+            f"{roof['collective_s'] * 1e3:.2f},{roof['bottleneck']},"
+            f"{'' if ufr is None else f'{ufr:.2f}'}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

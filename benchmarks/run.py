@@ -1,0 +1,46 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints CSV rows ``name,...`` per artifact; see EXPERIMENTS.md for the
+interpretation and paper-value comparisons.
+"""
+
+from __future__ import annotations
+
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        fig2_costs,
+        fig3_regions,
+        fig4_estimation,
+        roofline,
+        scenario6,
+        table1_complexity,
+        table2_queries,
+    )
+
+    modules = [
+        ("table1", table1_complexity),
+        ("table2", table2_queries),
+        ("fig2", fig2_costs),
+        ("fig3", fig3_regions),
+        ("fig4", fig4_estimation),
+        ("scenario6", scenario6),
+        ("roofline", roofline),
+    ]
+    for name, mod in modules:
+        t0 = time.time()
+        print(f"# ==== {name} " + "=" * 50, flush=True)
+        try:
+            for row in mod.run():
+                print(row)
+        except Exception:  # noqa: BLE001 — keep the sweep going
+            traceback.print_exc()
+            print(f"{name},ERROR")
+        print(f"# {name} took {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

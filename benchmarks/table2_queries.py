@@ -1,0 +1,27 @@
+"""Table 2: the 12 biological queries — multi-source solution pairs and
+valid start nodes on the Alibaba statistical twin, side-by-side with the
+paper's numbers."""
+
+from __future__ import annotations
+
+from benchmarks.common import twin, twin_device
+from repro.core import paa
+from repro.graph.generators import TABLE2_PAPER, TABLE2_QUERIES
+
+
+def run() -> list[str]:
+    g = twin()
+    dg = twin_device()
+    rows = ["table2,query,pairs_ours,pairs_paper,starts_ours,starts_paper,zero_pattern_match"]
+    for name, q in TABLE2_QUERIES.items():
+        ca = paa.compile_query(q, g)
+        starts = paa.valid_start_nodes(ca, g)
+        srcs, _ = paa.answers_multi_source(ca, dg, starts, chunk=64)
+        pp, ps = TABLE2_PAPER[name]
+        match = (len(srcs) == 0) == (pp == 0)
+        rows.append(f"table2,{name},{len(srcs)},{pp},{len(starts)},{ps},{match}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

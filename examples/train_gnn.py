@@ -1,0 +1,52 @@
+"""Train a GNN for a few hundred steps with the fault-tolerant loop
+(deliverable b: end-to-end training driver).
+
+Run:  PYTHONPATH=src python examples/train_gnn.py --steps 200
+"""
+
+import argparse
+
+import jax
+
+from repro.configs import registry
+from repro.data import pipeline
+from repro.dist import sharding as shd
+from repro.models import gnn
+from repro.training import loop
+from repro.training import optimizer as opt_lib
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gcn-cora", choices=["gcn-cora", "schnet", "nequip"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt", default="/tmp/repro_gnn_ckpt")
+    args = ap.parse_args()
+
+    rules = shd.Rules.from_mesh(None)
+    cfg = registry.get_arch(args.arch).smoke()
+
+    if args.arch == "gcn-cora":
+        batch = pipeline.cora_like_batch(400, 1600, cfg.d_feat, cfg.n_classes, seed=0)
+    else:
+        batch = pipeline.molecules_batch(16, 12, 30, seed=0)
+
+    def init_fn():
+        params = gnn.INIT_FNS[cfg.name](cfg, jax.random.key(0))
+        return params, opt_lib.get(cfg.optimizer).init(params)
+
+    result = loop.run(
+        init_fn=init_fn,
+        train_step=gnn.make_gnn_train_step(cfg, rules),
+        batch_fn=lambda step: batch,
+        n_steps=args.steps,
+        ckpt_dir=args.ckpt,
+        ckpt_every=50,
+        log_every=25,
+    )
+    print(f"resumed from step {result.start_step}; "
+          f"loss {result.losses[0]:.4f} -> {result.losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

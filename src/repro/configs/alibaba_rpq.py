@@ -1,0 +1,41 @@
+"""alibaba-rpq: the paper's own system — batched distributed RPQ serving
+over arbitrarily distributed edges (S2 executor), plus the cost-estimation
+rollout engine.  This is the 11th (paper-native) architecture."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ArchSpec, RPQ_SHAPES, ShapeSpec, register
+
+
+@dataclasses.dataclass(frozen=True)
+class RPQConfig:
+    name: str = "alibaba-rpq"
+    n_nodes: int = 50000
+    n_sites: int = 256
+    query: str = "q1"  # Table-2 query id used for the lowered automaton
+    replication_rate: float = 0.2
+    max_levels: int = 64
+
+
+def full() -> RPQConfig:
+    return RPQConfig()
+
+
+def smoke() -> RPQConfig:
+    return RPQConfig(n_nodes=64, n_sites=4, max_levels=16)
+
+
+def input_specs(cfg: RPQConfig, shape: ShapeSpec, n_edges_padded: int) -> dict:
+    s = cfg.n_sites
+    return {
+        "src": jax.ShapeDtypeStruct((s, n_edges_padded), jnp.int32),
+        "lbl": jax.ShapeDtypeStruct((s, n_edges_padded), jnp.int32),
+        "dst": jax.ShapeDtypeStruct((s, n_edges_padded), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((s, n_edges_padded), jnp.bool_),
+        "starts": jax.ShapeDtypeStruct((shape.dims["batch"],), jnp.int32),
+    }
+
+
+register(ArchSpec("alibaba-rpq", "rpq", full, smoke, RPQ_SHAPES))

@@ -1,0 +1,52 @@
+"""dlrm-mlperf: MLPerf DLRM (Criteo 1TB) [arXiv:1906.00091]."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ArchSpec, RECSYS_SHAPES, ShapeSpec, register
+from repro.models import dlrm
+
+
+def full() -> dlrm.DLRMConfig:
+    return dlrm.DLRMConfig()
+
+
+def smoke() -> dlrm.DLRMConfig:
+    return dlrm.DLRMConfig(
+        table_sizes=(64, 48, 32), n_sparse=3, embed_dim=8, n_dense=5,
+        bot_mlp=(16, 8), top_mlp=(16, 8, 1),
+    )
+
+
+def input_specs(cfg: dlrm.DLRMConfig, shape: ShapeSpec) -> dict:
+    b = shape.dims["batch"]
+    spec = {
+        "dense": jax.ShapeDtypeStruct((b, cfg.n_dense), jnp.float32),
+        "sparse": jax.ShapeDtypeStruct((b, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+    }
+    if shape.kind == "train":
+        spec["labels"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+    if shape.kind == "retrieval":
+        spec["candidates"] = jax.ShapeDtypeStruct(
+            (shape.dims["n_candidates"], cfg.embed_dim), jnp.float32
+        )
+    return spec
+
+
+def smoke_batch(cfg: dlrm.DLRMConfig, kind: str, seed: int = 0) -> dict:
+    r = np.random.default_rng(seed)
+    b = 8 if kind != "retrieval" else 1
+    batch = {
+        "dense": jnp.asarray(r.normal(size=(b, cfg.n_dense)), jnp.float32),
+        "sparse": jnp.asarray(
+            r.integers(0, min(cfg.table_sizes), (b, cfg.n_sparse, cfg.multi_hot)), jnp.int32
+        ),
+    }
+    if kind == "train":
+        batch["labels"] = jnp.asarray(r.integers(0, 2, b), jnp.int32)
+    if kind == "retrieval":
+        batch["candidates"] = jnp.asarray(r.normal(size=(512, cfg.embed_dim)), jnp.float32)
+    return batch
+
+
+register(ArchSpec("dlrm-mlperf", "recsys", full, smoke, RECSYS_SHAPES))

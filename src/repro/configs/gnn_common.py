@@ -1,0 +1,88 @@
+"""Shared GNN config/input plumbing for the four graph archs."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ShapeSpec
+from repro.models import gnn
+
+
+def shape_counts(shape: ShapeSpec) -> tuple[int, int, int]:
+    """(n_nodes, n_edges, n_graphs) of the lowered batch for a shape."""
+    d = shape.dims
+    if shape.name == "minibatch_lg":
+        b, f0, f1 = d["batch_nodes"], d["fanout0"], d["fanout1"]
+        nodes = b + b * f0 + b * f0 * f1
+        edges = b * f0 + b * f0 * f1
+        return nodes, edges, 1
+    if shape.name == "molecule":
+        return d["n_nodes"] * d["batch"], d["n_edges"] * d["batch"], d["batch"]
+    return d["n_nodes"], d["n_edges"], 1
+
+
+def pad_edges(e: int, shards: int = 512) -> int:
+    return -(-e // shards) * shards
+
+
+def gnn_input_specs(cfg, shape: ShapeSpec, needs_feat: bool) -> dict:
+    n, e, g = shape_counts(shape)
+    big_equi = getattr(cfg, "name", "") == "equiformer-v2" and n >= 150_000
+    if big_equi:
+        # node rows shard over model(16) × data(≤32); edge chunks of 32k
+        # must divide the per-data-shard edge count on both meshes
+        n = -(-n // 512) * 512
+        e = -(-e // (1 << 20)) * (1 << 20)
+    else:
+        e = pad_edges(e)
+    i32, f32, b = jnp.int32, jnp.float32, jnp.bool_
+    spec = {
+        "edge_src": jax.ShapeDtypeStruct((e,), i32),
+        "edge_dst": jax.ShapeDtypeStruct((e,), i32),
+        "edge_mask": jax.ShapeDtypeStruct((e,), b),
+        "node_mask": jax.ShapeDtypeStruct((n,), b),
+    }
+    if needs_feat:
+        spec["node_feat"] = jax.ShapeDtypeStruct((n, shape.dims.get("d_feat", 16)), f32)
+        spec["labels"] = jax.ShapeDtypeStruct((n,), i32)
+        spec["train_mask"] = jax.ShapeDtypeStruct((n,), b)
+    else:
+        spec["species"] = jax.ShapeDtypeStruct((n,), i32)
+        spec["positions"] = jax.ShapeDtypeStruct((n, 3), f32)
+        spec["energy"] = jax.ShapeDtypeStruct((g,), f32)
+        if g > 1:
+            spec["graph_ids"] = jax.ShapeDtypeStruct((n,), i32)
+    return spec
+
+
+def gnn_smoke_batch(needs_feat: bool, n=24, e=64, d_feat=8, n_classes=4, g=2, seed=0) -> dict:
+    r = np.random.default_rng(seed)
+    batch = {
+        "edge_src": jnp.asarray(r.integers(0, n, e), jnp.int32),
+        "edge_dst": jnp.asarray(r.integers(0, n, e), jnp.int32),
+        "edge_mask": jnp.ones((e,), bool),
+        "node_mask": jnp.ones((n,), bool),
+    }
+    if needs_feat:
+        batch["node_feat"] = jnp.asarray(r.normal(size=(n, d_feat)), jnp.float32)
+        batch["labels"] = jnp.asarray(r.integers(0, n_classes, n), jnp.int32)
+        batch["train_mask"] = jnp.asarray(r.random(n) < 0.5)
+    else:
+        batch["species"] = jnp.asarray(r.integers(0, 5, n), jnp.int32)
+        batch["positions"] = jnp.asarray(r.normal(size=(n, 3)) * 2, jnp.float32)
+        batch["graph_ids"] = jnp.asarray(np.sort(r.integers(0, g, n)), jnp.int32)
+        batch["energy"] = jnp.asarray(r.normal(size=(g,)), jnp.float32)
+    return batch
+
+
+def gcn_for_shape(cfg: gnn.GCNConfig, shape: ShapeSpec) -> gnn.GCNConfig:
+    """GCN's input width/classes track the dataset of each shape."""
+    classes = {"full_graph_sm": 7, "minibatch_lg": 41, "ogb_products": 47, "molecule": 8}
+    return dataclasses.replace(
+        cfg,
+        d_feat=shape.dims.get("d_feat", 16),
+        n_classes=classes.get(shape.name, 8),
+    )

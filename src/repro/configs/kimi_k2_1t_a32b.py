@@ -1,0 +1,24 @@
+"""kimi-k2-1t-a32b: 61L d_model=7168 64H (GQA kv=8) d_ff=2048 vocab=163840,
+MoE 384e top-8 — trillion-param MoE [arXiv:2501.kimi2; unverified].
+
+Trains with Adafactor (factored second moments) and FSDP-sharded expert
+weights (d_ff over the data axes, gathered just-in-time per layer) so the
+~1T parameters fit 256/512 chips (DESIGN.md §6)."""
+from repro.configs import lm_common
+from repro.configs.registry import ArchSpec, LM_SHAPES, register
+from repro.models import transformer as tr
+
+
+def full() -> tr.LMConfig:
+    return tr.LMConfig(
+        name="kimi-k2-1t-a32b", n_layers=61, d_model=7168, n_q_heads=64,
+        n_kv_heads=8, d_head=112, d_ff=2048, vocab=163840,
+        n_experts=384, top_k=8, microbatches=8,
+        optimizer="adafactor", fsdp_experts=True,
+    )
+
+
+register(ArchSpec(
+    "kimi-k2-1t-a32b", "lm", full,
+    lambda: lm_common.lm_smoke("kimi-k2-1t-a32b", moe=True), LM_SHAPES,
+))

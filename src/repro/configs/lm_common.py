@@ -1,0 +1,58 @@
+"""Shared LM config/input plumbing for the five transformer archs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import LM_SHAPES, ShapeSpec
+from repro.models import transformer as tr
+
+
+def lm_smoke(name: str, moe: bool = False) -> tr.LMConfig:
+    return tr.LMConfig(
+        name=name, n_layers=2, d_model=64, n_q_heads=4, n_kv_heads=2, d_head=16,
+        d_ff=128 if not moe else 64, vocab=211, qk_norm=True,
+        n_experts=4 if moe else 0, top_k=2 if moe else 0, microbatches=1,
+        dtype=jnp.float32,
+    )
+
+
+def lm_input_specs(cfg: tr.LMConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    b, s = shape.dims["batch"], shape.dims["seq"]
+    i32 = jnp.int32
+    if shape.kind == "train":
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    if shape.kind == "decode":
+        kv = jax.ShapeDtypeStruct(
+            (cfg.n_layers, b, s, cfg.n_kv_heads, cfg.d_head), cfg.dtype
+        )
+        return {
+            "cache": {"k": kv, "v": kv, "len": jax.ShapeDtypeStruct((), i32)},
+            "tokens": jax.ShapeDtypeStruct((b,), i32),
+        }
+    raise ValueError(shape.kind)
+
+
+def lm_smoke_batch(cfg: tr.LMConfig, kind: str, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    if kind == "train":
+        toks = rng.integers(0, cfg.vocab, (4, 32))
+        return {
+            "tokens": jnp.asarray(toks, jnp.int32),
+            "labels": jnp.asarray(np.roll(toks, -1, 1), jnp.int32),
+        }
+    if kind == "prefill":
+        return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32)}
+    if kind == "decode":
+        cache = tr.init_cache(cfg, batch=2, max_len=64)
+        cache["len"] = jnp.int32(7)
+        return {"cache": cache, "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2,)), jnp.int32)}
+    raise ValueError(kind)

@@ -1,0 +1,180 @@
+"""Query planner — the paper's §6 decision workflow as a library.
+
+Given a query, a local data sample, and a live network, the planner:
+
+  1. probes the network for N_p, N_c, k (§5.2.1),
+  2. computes Q_lbl from the query and estimates D_s1 from sample label
+     frequencies (§5.2.2),
+  3. estimates the (Q_bc, D_s2) *distribution* with a statistical graph
+     model (§5.3) fitted on the sample,
+  4. evaluates the discriminant at configurable quantiles and produces a
+     strategy decision with a traffic forecast and an S2 cost cap (§3.6).
+
+The same machinery is reused by the framework for non-RPQ data-movement
+decisions (DESIGN.md §5): ``embedding_placement`` maps the replicate-vs-
+shard choice for recsys embedding tables onto the k/d-vs-discriminant
+rule, and distributed GNN training uses the planner to pick between
+gather-all-halo (S1) and per-hop demand-driven exchange (S2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import cost_model, estimation, paa
+from repro.core import regex as rx
+from repro.core.automaton import CompiledAutomaton
+from repro.core.cost_model import NetworkParams, StrategyChoice
+from repro.core.strategies import EDGE_SYMBOLS, StrategyCost
+from repro.graph.partition import OverlayNetwork, Placement
+from repro.graph.structure import LabeledGraph
+
+
+@dataclasses.dataclass
+class QueryPlan:
+    query: str
+    choice: StrategyChoice
+    net: NetworkParams
+    q_lbl: float
+    d_s1_est: float
+    q_bc_quantiles: dict[float, float]
+    d_s2_quantiles: dict[float, float]
+    p_s2_optimal: float  # fraction of sampled rollouts where Eq. 3 favours S2
+    s2_cost_cap: int  # §3.6: interrupt S2 beyond this many expansions
+    forecast_symbols: dict[str, float]  # expected network traffic per strategy
+
+
+def probe_network(net: OverlayNetwork, placement: Placement, seed: int = 0) -> NetworkParams:
+    """§5.2.1: ping (N_p), connection count (2·N_c), replication sample (k)."""
+    n_p = net.probe_ping()
+    n_c = net.probe_connection_count() // 2
+    k = net.probe_replication(placement, n_samples=64, seed=seed)
+    return NetworkParams(n_peers=n_p, n_connections=n_c, replication_rate=k)
+
+
+def plan_query(
+    query: str,
+    sample: LabeledGraph,
+    net_params: NetworkParams,
+    total_edges: int | None = None,
+    model_kind: str = "bayesian",
+    n_rollouts: int = 2000,
+    quantiles: tuple[float, ...] = (0.5, 0.9),
+    decision_quantile: float = 0.9,
+    seed: int = 0,
+) -> QueryPlan:
+    """Produce a strategy decision for ``query`` using only local data.
+
+    ``sample`` is the planner's local subset of the graph (Alice's own
+    data in §6); ``total_edges`` defaults to scaling the sample by 1
+    (sample == full stats) and should be the |E| estimate from the
+    broadcast count probe when available."""
+    ast = rx.parse(query)
+    ca = paa.compile_query(query, sample)
+    total_edges = total_edges if total_edges is not None else sample.n_edges
+
+    q_lbl = float(len(rx.labels_of(ast)))
+    lmap = sample.label_to_id
+    label_ids = {lmap[l] for l in rx.labels_of(ast) if l in lmap}
+    d_s1 = estimation.estimate_d_s1(sample, label_ids, total_edges, rx.has_wildcard(ast))
+
+    if model_kind == "gilbert":
+        model: estimation.GilbertModel | estimation.BayesianModel = estimation.GilbertModel.fit(sample)
+    else:
+        model = estimation.BayesianModel.fit(sample)
+    rollouts = estimation.estimate_distribution(ca, model, n_rollouts, seed=seed)
+    q_bc = np.array([r.q_bc for r in rollouts], float)
+    d_s2 = np.minimum(np.array([r.d_s2 for r in rollouts], float), d_s1)  # §6: bounded by D_s1
+
+    nz = q_bc > 0
+    q_bc_nz = q_bc[nz] if nz.any() else q_bc
+    d_s2_nz = d_s2[nz] if nz.any() else d_s2
+    qq = {q: float(np.quantile(q_bc_nz, q)) for q in quantiles}
+    dq = {q: float(np.quantile(d_s2_nz, q)) for q in quantiles}
+
+    # per-rollout Eq.-3 evaluation → probability that S2 is optimal
+    kd = net_params.replication_rate / net_params.mean_degree
+    wins = 0
+    for qb, ds in zip(q_bc_nz, d_s2_nz):
+        disc = cost_model.discriminant(q_lbl, d_s1, qb, ds)
+        if kd > disc:  # Eq. 3 (see cost_model): S2 optimal iff k/d > discr
+            wins += 1
+    p_s2 = wins / max(len(q_bc_nz), 1)
+
+    s1c = StrategyCost("S1", q_lbl, d_s1)
+    s2c = StrategyCost("S2", qq[decision_quantile], dq[decision_quantile])
+    choice = cost_model.choose_strategy(net_params, s1c, s2c)
+
+    forecast = {
+        "S1": cost_model.cost_of(net_params, s1c),
+        "S2": cost_model.cost_of(net_params, s2c),
+    }
+    # cost cap: stop S2 once it has expanded 4× the decision-quantile estimate
+    cap = int(4 * max(qq[decision_quantile], 1.0))
+    return QueryPlan(
+        query=query,
+        choice=choice,
+        net=net_params,
+        q_lbl=q_lbl,
+        d_s1_est=d_s1,
+        q_bc_quantiles=qq,
+        d_s2_quantiles=dq,
+        p_s2_optimal=p_s2,
+        s2_cost_cap=cap,
+        forecast_symbols=forecast,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Framework reuse of the discriminant rule (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementDecision:
+    mode: str  # "replicate" (S1-like) | "shard" (S2-like demand-driven)
+    reason: str
+
+
+def embedding_placement(
+    table_rows: int,
+    embed_dim: int,
+    batch_lookups: int,
+    n_devices: int,
+    replicate_budget_bytes: int = 2 << 30,
+) -> PlacementDecision:
+    """Replicate-vs-shard for a recsys embedding table, phrased as the
+    paper's trade-off: replicating is S1 (pay full data movement once per
+    refresh, lookups free/local); sharding is S2 (pay per-lookup all-to-all
+    for exactly the rows needed).
+
+    Broadcast-side ≈ table bytes to every device; demand-side ≈ per-step
+    gathered rows.  Small tables replicate; big tables shard."""
+    table_bytes = table_rows * embed_dim * 4
+    lookup_bytes = batch_lookups * embed_dim * 4
+    if table_bytes <= replicate_budget_bytes // max(n_devices, 1) or table_bytes <= 4 * lookup_bytes:
+        return PlacementDecision("replicate", f"table {table_bytes}B within replicate budget")
+    return PlacementDecision("shard", f"table {table_bytes}B ≫ per-step demand {lookup_bytes}B")
+
+
+def gnn_halo_strategy(
+    n_layers: int,
+    avg_degree: float,
+    batch_nodes: int,
+    n_nodes: int,
+    net_params: NetworkParams,
+) -> PlacementDecision:
+    """S1-vs-S2 for distributed GNN feature retrieval on arbitrarily
+    partitioned edges: the L-hop neighborhood is the query, Q_bc grows as
+    the frontier (≈ batch·deg^L), D_s1 is the full feature set."""
+    frontier = batch_nodes * (avg_degree ** n_layers)
+    d_s1 = float(n_nodes)
+    d_s2 = min(float(frontier), d_s1)
+    q_lbl, q_bc = 1.0, float(n_layers * batch_nodes)
+    disc = cost_model.discriminant(q_lbl, d_s1, q_bc, d_s2)
+    kd = net_params.replication_rate / net_params.mean_degree
+    if kd > disc:
+        return PlacementDecision("shard", f"k/d={kd:.3f} > discr={disc:.3f}: demand-driven halo (S2)")
+    return PlacementDecision("replicate", f"k/d={kd:.3f} <= discr={disc:.3f}: gather-all features (S1)")

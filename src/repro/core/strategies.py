@@ -1,0 +1,426 @@
+"""Distributed RPQ processing strategies (paper §3) and message accounting.
+
+Strategies:
+
+* **S1 — top-down** (§3.3, §4.2.1): one broadcast of the query's distinct
+  labels; every site unicasts its label-matching edges; the PAA then runs
+  locally on the collected (deduplicated) subgraph.
+* **S2 — bottom-up** (§3.3, §4.2.2): the PAA runs at the querying site;
+  each BFS level's neighbor lookup is a broadcast search answered by the
+  sites holding matching edges, with a local cache deduplicating repeated
+  searches.
+* **S3 — query shipping** (§3.1/§3.5.5): like S2 but subqueries are
+  re-broadcast by a *different* site at every hop, so nothing can be
+  cached.  Modeled by the instrumented PAA with the cache disabled.
+* **S4 — query decomposition** (§3.2/§3.5.6): requires localized data; on
+  non-localized data every edge is potentially "outgoing", so S4 sits at
+  its degenerate bound — modeled analytically from placement statistics.
+
+Execution vs accounting (DESIGN.md §2): the *executors* run S1/S2 with
+real mesh collectives via ``jax.shard_map`` (sites = the ``data`` axis;
+the query batch = the ``model`` axis); the *meters* count message symbols
+with the paper's cost conventions (a symbol = one node id or label; an
+edge = 3 symbols; broadcasting b symbols costs 2·N_c·b messages).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import paa
+from repro.core.automaton import FWD, CompiledAutomaton
+from repro.core.regex import Node, has_wildcard, labels_of, query_size
+from repro.graph.partition import OverlayNetwork, Placement
+from repro.graph.structure import LabeledGraph
+
+# ---------------------------------------------------------------------------
+# Message accounting (the paper's cost metrics, §4.2)
+# ---------------------------------------------------------------------------
+
+EDGE_SYMBOLS = 3  # "an edge is expressed as 3 symbols" (§4.2.1)
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategyCost:
+    """Symbol counts for one query execution under one strategy.
+
+    ``broadcast_symbols`` is the paper's Q_lbl (S1) / Q_bc (S2);
+    ``unicast_symbols`` is D_s1 / D_s2 — *single-copy* data, the K
+    replication multiplier is applied by the cost functions (Eqs. 1–2)."""
+
+    strategy: str
+    broadcast_symbols: float
+    unicast_symbols: float
+    n_broadcasts: int = 0
+    edges_retrieved: int = 0
+
+
+def s1_costs(ast: Node, graph: LabeledGraph) -> StrategyCost:
+    """§4.2.1: broadcast = #distinct labels; unicast = 3 × matching edges.
+
+    A wildcard forces the full edge set (§3.6 — 'the mere presence of a
+    wildcard is enough' to hit the worst case)."""
+    lbls = labels_of(ast)
+    lmap = graph.label_to_id
+    if has_wildcard(ast):
+        n_match = graph.n_edges
+    else:
+        ids = [lmap[l] for l in lbls if l in lmap]
+        counts = graph.label_counts()
+        n_match = int(sum(counts[i] for i in ids))
+    return StrategyCost(
+        strategy="S1",
+        broadcast_symbols=float(len(lbls)),
+        unicast_symbols=float(EDGE_SYMBOLS * n_match),
+        n_broadcasts=1,
+        edges_retrieved=n_match,
+    )
+
+
+def s2_costs(
+    ca: CompiledAutomaton,
+    index: paa.HostIndex,
+    start_node: int,
+    max_pops: int | None = None,
+) -> StrategyCost:
+    """§4.2.2: instrumented PAA (cache on).  Also usable as the §3.6
+    'interruptible' capped execution via ``max_pops``."""
+    tr = paa.run_instrumented(ca, index, start_node, max_pops=max_pops)
+    return StrategyCost(
+        strategy="S2",
+        broadcast_symbols=float(tr.q_bc),
+        unicast_symbols=float(tr.d_s2),
+        n_broadcasts=tr.n_broadcasts,
+        edges_retrieved=tr.edges_traversed,
+    )
+
+
+def s3_costs(ca: CompiledAutomaton, index: paa.HostIndex, start_node: int) -> StrategyCost:
+    """§3.5.5: query shipping = S2's traversal with no cache (each hop's
+    broadcast is issued by a different site, so nothing deduplicates)."""
+    tr = _run_uncached(ca, index, start_node)
+    return StrategyCost(
+        strategy="S3",
+        broadcast_symbols=float(tr.q_bc),
+        unicast_symbols=float(tr.d_s2),
+        n_broadcasts=tr.n_broadcasts,
+        edges_retrieved=tr.edges_traversed,
+    )
+
+
+def s4_costs(ast: Node, graph: LabeledGraph, placement: Placement) -> StrategyCost:
+    """§3.5.6 at the non-localized degenerate bound: sites must exchange
+    their potentially-outgoing edges (all of them — K·|E| copies, 3 symbols
+    each) before the one-round query; responses may carry the full traversed
+    subgraph.  We charge the label-restricted subgraph as the response
+    (the best case S4 could do with the paper's label selection)."""
+    m = query_size(ast)
+    K = placement.replication_factor
+    bc = EDGE_SYMBOLS * K * graph.n_edges + m
+    s1 = s1_costs(ast, graph)
+    return StrategyCost(
+        strategy="S4",
+        broadcast_symbols=float(bc),
+        unicast_symbols=float(s1.unicast_symbols),
+        n_broadcasts=1 + placement.n_sites,
+        edges_retrieved=s1.edges_retrieved,
+    )
+
+
+def _run_uncached(ca, index, start_node):
+    """Instrumented PAA variant with the broadcast cache disabled (S3)."""
+    graph = index.graph
+    tr = paa.S2Trace()
+    outs: dict[int, list] = {}
+    for t in ca.transitions:
+        outs.setdefault(t.src, []).append(t)
+    state_symbols = {q: sorted({(t.label_id, t.direction) for t in ts}) for q, ts in outs.items()}
+    visited = {(ca.start, int(start_node))}
+    queue = [(ca.start, int(start_node))]
+    accepting = set(ca.accepting)
+    if ca.start in accepting:
+        tr.answers.add(int(start_node))
+    seen_edges: set[int] = set()
+    while queue:
+        q, v = queue.pop()
+        tr.nodes_visited += 1
+        symbols = state_symbols.get(q)
+        if not symbols:
+            continue
+        tr.n_broadcasts += 1
+        tr.q_bc += 1 + len(symbols)
+        for (label_id, direction) in symbols:
+            if label_id >= 0:
+                eids = index.out_edges(v, label_id) if direction == FWD else index.in_edges(v, label_id)
+            else:
+                eids = index.all_out_edges(v) if direction == FWD else index.all_in_edges(v)
+            tr.d_s2 += EDGE_SYMBOLS * len(eids)
+            for e in eids:
+                seen_edges.add(int(e) if direction == FWD else -int(e) - 1)
+        for t in outs[q]:
+            if t.label_id >= 0:
+                eids = index.out_edges(v, t.label_id) if t.direction == FWD else index.in_edges(v, t.label_id)
+            else:
+                eids = index.all_out_edges(v) if t.direction == FWD else index.all_in_edges(v)
+            nbrs = graph.dst[eids] if t.direction == FWD else graph.src[eids]
+            for nb in nbrs:
+                key = (t.dst, int(nb))
+                if key not in visited:
+                    visited.add(key)
+                    queue.append(key)
+                if t.dst in accepting:
+                    tr.answers.add(int(nb))
+    tr.edges_traversed = len(seen_edges)
+    return tr
+
+
+# ---------------------------------------------------------------------------
+# S1 executor — one broadcast, one gather, local PAA
+# ---------------------------------------------------------------------------
+
+
+def s1_gather(
+    mesh: Mesh,
+    site_arrays: dict[str, np.ndarray],
+    label_mask: np.ndarray,
+    cap: int,
+    site_axes: tuple[str, ...] = ("data",),
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, int]:
+    """Collect, from every site, its edges whose label is in ``label_mask``.
+
+    Each site compacts matches to a static ``cap``-sized buffer (matched
+    edges sorted first) and the buffers are all-gathered — the unicast
+    response phase of S1 with static shapes.  ``cap`` is chosen by the
+    planner from the D_s1 estimate (§5.2.2); the returned ``overflow``
+    count is non-zero if any site had more matches than the buffer, in
+    which case the caller re-runs with a larger cap.
+
+    Returns (src, lbl, dst, valid_mask) of shape (n_sites, cap) plus the
+    global overflow count.
+    """
+    n_sites = site_arrays["src"].shape[0]
+
+    def local(src, lbl, dst, mask, lblmask):
+        # src/lbl/dst/mask: (S_local, E) — one device may hold several sites
+        def per_site(src, lbl, dst, mask):
+            match = jnp.logical_and(mask, lblmask[lbl])
+            # matched-first compaction: stable sort by ~match
+            take = jnp.argsort(jnp.logical_not(match), stable=True)[:cap]
+            overflow = jnp.maximum(match.sum() - cap, 0)
+            return src[take], lbl[take], dst[take], match[take], overflow
+
+        src, lbl, dst, match, overflow = jax.vmap(per_site)(src, lbl, dst, mask)
+        return src, lbl, dst, match, overflow.sum()[None]
+
+    spec_e = P(site_axes, None)
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(spec_e, spec_e, spec_e, spec_e, P()),
+        out_specs=(spec_e, spec_e, spec_e, spec_e, P(site_axes)),
+    )
+    src, lbl, dst, valid, overflow = fn(
+        jnp.asarray(site_arrays["src"]),
+        jnp.asarray(site_arrays["lbl"]),
+        jnp.asarray(site_arrays["dst"]),
+        jnp.asarray(site_arrays["mask"]),
+        jnp.asarray(label_mask),
+    )
+    return (
+        np.asarray(src),
+        np.asarray(lbl),
+        np.asarray(dst),
+        np.asarray(valid),
+        int(np.asarray(overflow).sum()),
+    )
+
+
+def s1_execute(
+    mesh: Mesh,
+    placement: Placement,
+    ast: Node,
+    ca: CompiledAutomaton,
+    start_node: int,
+    cap: int | None = None,
+    site_axes: tuple[str, ...] = ("data",),
+) -> tuple[set[int], StrategyCost]:
+    """Full S1: broadcast labels → gather matching edges → dedup → local PAA."""
+    graph = placement.graph
+    lbl_ids = {graph.label_to_id[l] for l in labels_of(ast) if l in graph.label_to_id}
+    label_mask = np.zeros(graph.n_labels, bool)
+    if has_wildcard(ast):
+        label_mask[:] = True
+    else:
+        label_mask[sorted(lbl_ids)] = True
+
+    site_arrays = placement.padded_device_arrays()
+    if cap is None:
+        cap = site_arrays["src"].shape[1]
+    while True:
+        src, lbl, dst, valid, overflow = s1_gather(mesh, site_arrays, label_mask, cap, site_axes)
+        if overflow == 0:
+            break
+        cap = min(2 * cap, site_arrays["src"].shape[1])  # planner underestimated: grow
+
+    v = valid.reshape(-1)
+    sub = LabeledGraph(
+        graph.n_nodes, src.reshape(-1)[v], lbl.reshape(-1)[v], dst.reshape(-1)[v], graph.labels
+    )
+    sub = sub.dedup()  # replicated copies collapse at the querying site
+    dg = paa.device_form(sub)
+    acc = np.asarray(paa.answers_single_source(ca, dg, start_node))
+    answers = set(np.nonzero(acc)[0].tolist())
+    cost = s1_costs(ast, graph)
+    return answers, cost
+
+
+# ---------------------------------------------------------------------------
+# S2 executor — frontier loop over sharded sites, batched queries
+# ---------------------------------------------------------------------------
+
+
+def make_s2_step_fn(
+    ca: CompiledAutomaton,
+    n_nodes: int,
+    mesh: Mesh,
+    site_axes: tuple[str, ...] = ("data",),
+    batch_axis: str | None = "model",
+    max_levels: int | None = None,
+):
+    """Build the jitted batched S2 executor.
+
+    Sites (edge shards) live on ``site_axes``; the query batch is sharded
+    over ``batch_axis``.  Each BFS level: every site matches *its* local
+    edges against the (replicated) frontier and the per-site contributions
+    are OR-combined with ``lax.pmax`` over the site axes — the collective
+    realization of 'broadcast search + unicast responses'.
+
+    Returns ``fn(src, lbl, dst, mask, starts) -> answers`` with shapes
+    src/lbl/dst/mask: (n_sites, E_site) int32/bool; starts: (B,) int32;
+    answers: (B, n_nodes) bool.
+    """
+    n_states = ca.n_states
+    levels = max_levels if max_levels is not None else n_states * n_nodes
+
+    # ---- §Perf iteration 1 (label-range fusion): transitions that share
+    # (src_state, dst_state, direction) and carry *contiguous* label ids
+    # (the paper's C/A/I/E/P classes are contiguous in the vocabulary)
+    # fuse into ONE range predicate — q1 drops from 33 per-level edge
+    # scans to 5.  The per-run edge masks are loop-invariant, so they are
+    # hoisted out of the BFS while_loop (XLA cannot hoist across an
+    # opaque while body on its own).
+    from collections import defaultdict
+
+    groups: dict[tuple[int, int, int], list[int]] = defaultdict(list)
+    for t in ca.transitions:
+        groups[(t.src, t.dst, t.direction)].append(t.label_id)
+    runs: list[tuple[int, int, int, int | None, int | None]] = []
+    for (s_st, d_st, direction), ids in sorted(groups.items()):
+        if any(i < 0 for i in ids):
+            runs.append((s_st, d_st, direction, None, None))  # wildcard
+        ids = sorted(i for i in ids if i >= 0)
+        start = prev = None
+        for i in ids:
+            if start is None:
+                start = prev = i
+            elif i == prev + 1:
+                prev = i
+            else:
+                runs.append((s_st, d_st, direction, start, prev))
+                start = prev = i
+        if start is not None:
+            runs.append((s_st, d_st, direction, start, prev))
+
+    def local(src, lbl, dst, mask, starts):
+        # Any number of sites may live on one device; matching + scatter is
+        # per-edge independent, so the local site block flattens into one
+        # edge set (the OR over co-located sites is implicit).
+        src, lbl, dst, mask = (a.reshape(-1) for a in (src, lbl, dst, mask))
+
+        # loop-invariant per-run edge predicates (computed once per query)
+        sels = []
+        for (_, _, _, lo, hi) in runs:
+            if lo is None:
+                sels.append(mask)
+            else:
+                sels.append(
+                    jnp.logical_and(mask, jnp.logical_and(lbl >= lo, lbl <= hi))
+                )
+
+        def expand(frontier):
+            nxt = jnp.zeros_like(frontier)
+            for (s_st, d_st, direction, _, _), sel in zip(runs, sels):
+                if direction == FWD:
+                    bits = jnp.logical_and(frontier[s_st, src], sel)
+                    contrib = jnp.zeros((n_nodes,), jnp.bool_).at[dst].max(bits)
+                else:
+                    bits = jnp.logical_and(frontier[s_st, dst], sel)
+                    contrib = jnp.zeros((n_nodes,), jnp.bool_).at[src].max(bits)
+                nxt = nxt.at[d_st].max(contrib)
+            # unicast-response combine: OR over every site holding a copy
+            for ax in site_axes:
+                nxt = jax.lax.pmax(nxt, ax)
+            return nxt
+
+        def one_query(s0):
+            visited0 = jnp.zeros((n_states, n_nodes), jnp.bool_).at[ca.start, s0].set(True)
+
+            def cond(state):
+                _, frontier, lev = state
+                return jnp.logical_and(frontier.any(), lev < levels)
+
+            def body(state):
+                visited, frontier, lev = state
+                new = jnp.logical_and(expand(frontier), jnp.logical_not(visited))
+                return jnp.logical_or(visited, new), new, lev + 1
+
+            visited, _, _ = jax.lax.while_loop(cond, body, (visited0, visited0, jnp.int32(0)))
+            acc = jnp.zeros((n_nodes,), jnp.bool_)
+            for qf in ca.accepting:
+                acc = jnp.logical_or(acc, visited[qf])
+            return acc
+
+        return jax.vmap(one_query)(starts)
+
+    spec_e = P(site_axes, None)
+    spec_b = P(batch_axis) if batch_axis else P()
+    return jax.jit(
+        jax.shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(spec_e, spec_e, spec_e, spec_e, spec_b),
+            out_specs=P(batch_axis, None) if batch_axis else P(None, None),
+        )
+    )
+
+
+def s2_execute(
+    mesh: Mesh,
+    placement: Placement,
+    ca: CompiledAutomaton,
+    start_nodes: np.ndarray,
+    site_axes: tuple[str, ...] = ("data",),
+    batch_axis: str | None = "model",
+    max_levels: int | None = None,
+) -> np.ndarray:
+    """Run the batched S2 executor for ``start_nodes``; (B, V) bool."""
+    arrays = placement.padded_device_arrays()
+    fn = make_s2_step_fn(
+        ca, placement.graph.n_nodes, mesh, site_axes, batch_axis, max_levels
+    )
+    return np.asarray(
+        fn(
+            jnp.asarray(arrays["src"]),
+            jnp.asarray(arrays["lbl"]),
+            jnp.asarray(arrays["dst"]),
+            jnp.asarray(arrays["mask"]),
+            jnp.asarray(np.asarray(start_nodes, np.int32)),
+        )
+    )

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: flash-decode GQA attention (split-KV online softmax).
+
+One new query token per sequence against a long KV cache.  Grid =
+(batch, kv blocks); running max / sum / accumulator live in VMEM scratch
+across the kv-block dimension (sequential on TPU), normalizing on the
+last block — FlashDecoding-style, with GQA handled by computing all
+q-heads of one kv-group together (rows = H = G·r packed as the tile's
+sublane dim).
+
+Block shapes: q tile (H, Dh); kv tile (block_kv, Dh) per group; scores
+(H, block_kv) — all VMEM-resident, MXU-aligned for Dh ∈ {64, 128} and
+block_kv a multiple of 128.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref, *, scale):
+    bi = pl.program_id(1)  # kv block index
+    n_blocks = pl.num_programs(1)
+
+    @pl.when(bi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (H, Dh)
+    k = k_ref[0]  # (Bkv, Dh)
+    v = v_ref[0]  # (Bkv, Dh)
+    bkv = k.shape[0]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (H, Bkv)
+    kv_pos = bi * bkv + jax.lax.broadcasted_iota(jnp.int32, (1, bkv), 1)
+    s = jnp.where(kv_pos < len_ref[0], s, -1e30)
+
+    m_prev = m_ref[...]  # (H, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)  # (H, Bkv)
+    corr = jnp.exp(m_prev - m_new)  # (H, 1)
+    l_new = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(bi == n_blocks - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode_gqa(
+    q: jax.Array,  # (B, H, Dh)
+    k: jax.Array,  # (B, S, G, Dh)
+    v: jax.Array,  # (B, S, G, Dh)
+    kv_len: jax.Array,  # () int32 — valid prefix length
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (B, H, Dh).  Requires S % block_kv == 0."""
+    B, H, Dh = q.shape
+    _, S, G, _ = k.shape
+    r = H // G
+    scale = 1.0 / math.sqrt(Dh)
+    n_blocks = S // block_kv
+
+    # group-major packing: one kernel instance handles one (batch, group)
+    qg = q.reshape(B, G, r, Dh).reshape(B * G, r, Dh)
+    kg = k.transpose(0, 2, 1, 3).reshape(B * G, S, Dh)
+    vg = v.transpose(0, 2, 1, 3).reshape(B * G, S, Dh)
+    lens = jnp.broadcast_to(kv_len, (1,)).astype(jnp.int32)
+
+    kernel = functools.partial(_decode_kernel, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * G, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, r, Dh), lambda g, b: (g, 0, 0)),
+            pl.BlockSpec((1, block_kv, Dh), lambda g, b: (g, b, 0)),
+            pl.BlockSpec((1, block_kv, Dh), lambda g, b: (g, b, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, r, Dh), lambda g, b: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * G, r, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((r, 1), jnp.float32),
+            pltpu.VMEM((r, 1), jnp.float32),
+            pltpu.VMEM((r, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg, lens)
+    return out.reshape(B, G, r, Dh).reshape(B, H, Dh)

@@ -1,0 +1,14 @@
+"""jit'd wrapper for the flash-decode kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attn.decode_attn import flash_decode_gqa
+
+
+@partial(jax.jit, static_argnames=("block_kv", "interpret"))
+def decode_attention(q, k, v, kv_len, block_kv: int = 512, interpret: bool = True):
+    return flash_decode_gqa(q, k, v, kv_len, block_kv=block_kv, interpret=interpret)

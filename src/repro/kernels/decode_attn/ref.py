@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for flash-decode GQA attention."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """q: (B, H, Dh); k/v: (B, S, G, Dh); returns (B, H, Dh)."""
+    B, H, Dh = q.shape
+    _, S, G, _ = k.shape
+    r = H // G
+    scale = 1.0 / math.sqrt(Dh)
+    qr = q.reshape(B, G, r, Dh)
+    s = jnp.einsum("bgrd,bsgd->bgrs", qr, k).astype(jnp.float32) * scale
+    mask = jnp.arange(S)[None, None, None, :] < kv_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", p.astype(v.dtype), v)
+    return out.reshape(B, H, Dh)

@@ -1,0 +1,38 @@
+"""jit'd wrappers for the fused EmbeddingBag kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedbag.embedbag import embedding_bag_sorted
+
+
+@partial(jax.jit, static_argnames=("n_bags", "interpret"))
+def embedding_bag(table, idx, bags, n_bags: int, interpret: bool = True):
+    """EmbeddingBag over possibly-unsorted lookups: sorts by bag id then
+    runs the fused kernel.  On TPU the sort is tiny vs the gather; data
+    pipelines that pre-sort can call ``embedding_bag_sorted`` directly.
+    Never-visited output blocks are left unwritten by the kernel; the
+    wrapper zeroes them to match EmbeddingBag semantics exactly."""
+    order = jnp.argsort(bags, stable=True)
+    out = embedding_bag_sorted(
+        table, idx[order], bags[order], n_bags, interpret=interpret
+    )
+    visited = jnp.zeros((n_bags,), jnp.bool_).at[bags].set(True)
+    return jnp.where(visited[:, None], out, 0)
+
+
+@partial(jax.jit, static_argnames=("n_nodes", "interpret"))
+def gnn_aggregate(messages_table, edge_src, edge_dst, n_nodes: int, interpret: bool = True):
+    """GNN scatter: aggregate per-source features into destination nodes.
+    messages_table: (N, D) node features; gathers rows at edge_src and
+    segment-sums into edge_dst — one fused pass."""
+    order = jnp.argsort(edge_dst, stable=True)
+    out = embedding_bag_sorted(
+        messages_table, edge_src[order], edge_dst[order], n_nodes, interpret=interpret
+    )
+    visited = jnp.zeros((n_nodes,), jnp.bool_).at[edge_dst].set(True)
+    return jnp.where(visited[:, None], out, 0)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the EmbeddingBag kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, idx, bags, n_bags):
+    rows = jnp.take(table, idx, axis=0)
+    return jax.ops.segment_sum(rows, bags, num_segments=n_bags)

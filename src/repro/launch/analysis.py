@@ -1,0 +1,150 @@
+"""Compiled-artifact analysis: memory, FLOPs, collective bytes, roofline.
+
+Hardware model (TPU v5e-class target, per brief):
+  peak 197 TFLOP/s bf16 per chip · 819 GB/s HBM · ~50 GB/s/link ICI.
+
+``collective_bytes`` parses the post-SPMD optimized HLO: shapes printed
+there are per-device, so summed operand sizes are per-device bytes on the
+wire (ring-algorithm multipliers are noted, not applied — the relative
+comparisons driving the perf loop are unaffected).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (we charge 1 link per chip, conservative)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?((?:bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|pred|c64|c128|f8e4m3fn|f8e5m2)"
+    r"\[[0-9,]*\][^)]*?)(?:\))?\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|pred|c64|c128|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-device operand bytes per collective kind in optimized HLO."""
+    out: dict[str, int] = {
+        "all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+        "all-to-all": 0, "collective-permute": 0,
+    }
+    counts: dict[str, int] = {k: 0 for k in out}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes_blob, kind = m.group(1), m.group(2)
+        if f"{kind}-done" in m.group(0):
+            continue  # -done carries the same tuple as -start
+        total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(shapes_blob))
+        out[kind] += total
+        counts[kind] += 1
+    out["n_ops"] = sum(counts.values())  # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline (§Roofline of EXPERIMENTS.md)."""
+
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    coll_bytes_per_device: float
+    n_devices: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)  # type: ignore[arg-type]
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self) -> float:
+        """Fraction of the step spent at the binding roof if the other two
+        terms fully overlap: bound / (sum of terms) would be pessimistic;
+        we report bound_s / total_serial as the overlap headroom and the
+        compute fraction bound as compute_s / bound_s."""
+        total = self.compute_s + self.memory_s + self.collective_s
+        return self.bound_s / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "bound_s": self.bound_s,
+            "overlap_headroom": self.roofline_fraction(),
+        }
+
+
+def analyze_compiled(compiled, n_devices: int) -> dict:
+    """Extract memory/cost/collective numbers from one compiled artifact."""
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    coll_total = float(
+        coll["all-reduce"] + coll["all-gather"] + coll["reduce-scatter"]
+        + coll["all-to-all"] + coll["collective-permute"]
+    )
+    roof = Roofline(flops, bytes_accessed, coll_total, n_devices)
+    return {
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_estimate_bytes": ma.argument_size_in_bytes
+            + ma.temp_size_in_bytes
+            + ma.output_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+        "cost": {"flops_per_device": flops, "bytes_per_device": bytes_accessed},
+        "collectives": coll,
+        "roofline": roof.as_dict(),
+    }
+
+
+def model_flops(family: str, kind: str, n_params: int, n_active: int, tokens: int) -> float:
+    """MODEL_FLOPS: 6·N·D for training (fwd+bwd), 2·N_active·D for serving."""
+    if kind == "train":
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens

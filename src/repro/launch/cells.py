@@ -1,0 +1,340 @@
+"""Per-cell lowering plans for the dry-run: (arch × shape) → jit-able step
+function + ShapeDtypeStruct inputs + NamedShardings.
+
+Every cell returns a :class:`CellPlan`; ``dryrun.py`` calls
+``jit(fn, in_shardings=...).lower(*args).compile()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import lm_common, registry
+from repro.configs import dlrm_mlperf as dlrm_cfg
+from repro.configs import gnn_common
+from repro.dist import sharding as shd
+from repro.models import dlrm, gnn
+from repro.models import transformer as tr
+from repro.training import optimizer as opt_lib
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape: str
+    fn: Callable
+    args: tuple  # ShapeDtypeStructs (pytrees)
+    in_shardings: tuple
+    n_params: int
+    n_active: int
+    tokens: int  # work units for MODEL_FLOPS
+    kind: str
+    donate: tuple[int, ...] = ()
+
+
+def _named(mesh: Mesh, spec_tree, shape_tree=None):
+    """NamedShardings from specs; with ``shape_tree``, fit each spec to its
+    leaf's shape (non-divisible dims degrade to replicated — e.g. granite's
+    vocab 49155 on a 16-way model axis)."""
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+    return jax.tree.map(
+        lambda shp, s: NamedSharding(mesh, shd.fit_spec(mesh, s, shp.shape)),
+        shape_tree,
+        spec_tree,
+    )
+
+
+def _zero_opt_specs(mesh: Mesh, opt_name: str, pshapes, pspecs):
+    """Optimizer state specs + ZeRO-1 sharding over the data axis."""
+    specs = opt_lib.state_spec_for(opt_name, pshapes, pspecs)
+    data_size = mesh.shape.get("data", 1)
+
+    def zero(leaf_shape, leaf_spec):
+        return opt_lib.zero_sharding(leaf_spec, leaf_shape.shape, "data", data_size)
+
+    if opt_name == "adamw":
+        m = jax.tree.map(zero, pshapes, specs["m"], is_leaf=lambda x: isinstance(x, P))
+        v = jax.tree.map(zero, pshapes, specs["v"], is_leaf=lambda x: isinstance(x, P))
+        return {"m": m, "v": v, "step": P()}
+    return specs  # adafactor stats are tiny; leave as derived
+
+
+def _opt_state_shapes(opt_name: str, pshapes):
+    opt = opt_lib.get(opt_name)
+
+    def fake(shape_struct):
+        return jnp.zeros(shape_struct.shape, shape_struct.dtype)
+
+    return jax.eval_shape(lambda: opt.init(jax.tree.map(fake, pshapes)))
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def lm_cell(arch: str, shape_name: str, mesh: Mesh) -> CellPlan:
+    spec = registry.get_arch(arch)
+    cfg: tr.LMConfig = spec.full()
+    shape = spec.shapes[shape_name]
+    rules = shd.Rules.from_mesh(mesh)
+    with shd.use_mesh(mesh):
+        pshapes = tr.param_shapes(cfg)
+        pspecs = tr.param_specs(cfg, rules)
+        psh = _named(mesh, pspecs, pshapes)
+        inputs = lm_common.lm_input_specs(cfg, shape)
+
+        if shape.kind == "train":
+            oshapes = _opt_state_shapes(cfg.optimizer, pshapes)
+            ospecs = _zero_opt_specs(mesh, cfg.optimizer, pshapes, pspecs)
+            osh = _named(mesh, ospecs, oshapes)
+            bspec = {
+                "tokens": rules.fit(P(rules.batch, None), inputs["tokens"].shape),
+                "labels": rules.fit(P(rules.batch, None), inputs["labels"].shape),
+            }
+            fn = tr.make_train_step(cfg, rules)
+            tokens = int(np.prod(inputs["tokens"].shape))
+            return CellPlan(
+                arch, shape_name, fn, (pshapes, oshapes, inputs),
+                (psh, osh, _named(mesh, bspec)),
+                cfg.param_count(), cfg.active_param_count(), tokens, "train",
+            )
+
+        if shape.kind == "prefill":
+            fn = tr.make_prefill(cfg, rules)
+            bspec = {"tokens": rules.fit(P(rules.batch, None), inputs["tokens"].shape)}
+            tokens = int(np.prod(inputs["tokens"].shape))
+            return CellPlan(
+                arch, shape_name, fn, (pshapes, inputs["tokens"]),
+                (psh, _named(mesh, bspec["tokens"])),
+                cfg.param_count(), cfg.active_param_count(), tokens, "prefill",
+            )
+
+        # decode
+        seq_sharded = shape.dims["seq"] >= 200_000
+        fn = tr.make_decode_step(cfg, rules, seq_sharded=seq_sharded)
+        kv_spec = (
+            rules.kv_cache_seq_sharded() if seq_sharded else rules.kv_cache()
+        )
+        cache_in = inputs["cache"]
+        kv_fit = rules.fit(kv_spec, cache_in["k"].shape)
+        csh = {
+            "k": NamedSharding(mesh, kv_fit),
+            "v": NamedSharding(mesh, kv_fit),
+            "len": NamedSharding(mesh, P()),
+        }
+        tok_spec = rules.fit(P(rules.batch), inputs["tokens"].shape)
+        tokens = shape.dims["batch"]
+        return CellPlan(
+            arch, shape_name, fn, (pshapes, cache_in, inputs["tokens"]),
+            (psh, csh, NamedSharding(mesh, tok_spec)),
+            cfg.param_count(), cfg.active_param_count(), tokens, "decode",
+        )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def gnn_cell(arch: str, shape_name: str, mesh: Mesh) -> CellPlan:
+    spec = registry.get_arch(arch)
+    shape = spec.shapes[shape_name]
+    rules = shd.Rules.from_mesh(mesh)
+    with shd.use_mesh(mesh):
+        cfg = spec.full()
+        needs_feat = arch == "gcn-cora"
+        if needs_feat:
+            cfg = gnn_common.gcn_for_shape(cfg, shape)
+        inputs = gnn_common.gnn_input_specs(cfg, shape, needs_feat)
+
+        init = gnn.INIT_FNS[cfg.name]
+        pshapes = jax.eval_shape(lambda: init(cfg, jax.random.key(0)))
+        pspecs = jax.tree.map(lambda _: P(), pshapes)  # GNN params are small: replicated
+        psh = _named(mesh, pspecs)
+
+        espec = rules.edges()
+        bspec = {}
+        for k, v in inputs.items():
+            if k.startswith("edge_"):
+                bspec[k] = rules.fit(espec, v.shape)
+            else:
+                bspec[k] = P(*([None] * len(v.shape)))
+        oshapes = _opt_state_shapes(cfg.optimizer, pshapes)
+        ospecs = jax.tree.map(
+            lambda _: P(), oshapes, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)
+        )
+        osh = _named(mesh, ospecs)
+
+        fn = gnn.make_gnn_train_step(cfg, rules)
+        inputs_wo = inputs
+        bsh = _named(mesh, {k: bspec[k] for k in inputs_wo})
+        n_params = sum(
+            int(np.prod(s.shape)) for s in jax.tree.leaves(pshapes)
+        )
+        _, n_edges, _ = gnn_common.shape_counts(shape)
+        return CellPlan(
+            arch, shape_name, fn, (pshapes, oshapes, inputs_wo),
+            (psh, osh, bsh), n_params, n_params, n_edges, "train",
+        )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+
+def dlrm_cell(arch: str, shape_name: str, mesh: Mesh) -> CellPlan:
+    spec = registry.get_arch(arch)
+    cfg: dlrm.DLRMConfig = spec.full()
+    shape = spec.shapes[shape_name]
+    rules = shd.Rules.from_mesh(mesh)
+    with shd.use_mesh(mesh):
+        pshapes = jax.eval_shape(lambda: dlrm.init_params(cfg, jax.random.key(0)))
+        pspecs = dlrm.param_specs(cfg, rules)
+        psh = _named(mesh, pspecs, pshapes)
+        inputs = dlrm_cfg.input_specs(cfg, shape)
+        bspec = {k: rules.fit(P(rules.batch), (v.shape[0],)) for k, v in inputs.items()}
+        bspec = {
+            k: P(*(tuple(bspec[k]) + (None,) * (len(v.shape) - 1)))
+            for k, v in inputs.items()
+        }
+        if shape.kind == "retrieval":
+            flat = tuple(rules.batch_axes) + (
+                (rules.model_axis,) if rules.model_axis else ()
+            )
+            bspec["candidates"] = rules.fit(P(flat, None), inputs["candidates"].shape)
+            bspec["dense"] = P(None, None)
+            bspec["sparse"] = P(None, None, None)
+        bsh = _named(mesh, bspec)
+        n_params = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(pshapes))
+
+        if shape.kind == "train":
+            oshapes = _opt_state_shapes(cfg.optimizer, pshapes)
+            ospecs = _zero_opt_specs(mesh, cfg.optimizer, pshapes, pspecs)
+            osh = _named(mesh, ospecs, oshapes)
+            fn = dlrm.make_train_step(cfg, rules)
+            return CellPlan(
+                arch, shape_name, fn, (pshapes, oshapes, inputs), (psh, osh, bsh),
+                n_params, n_params, shape.dims["batch"], "train",
+            )
+        if shape.kind == "retrieval":
+            fn = dlrm.make_retrieval_step(cfg, rules)
+            return CellPlan(
+                arch, shape_name, fn, (pshapes, inputs), (psh, bsh),
+                n_params, n_params, shape.dims["n_candidates"], "retrieval",
+            )
+        fn = dlrm.make_serve_step(cfg, rules)
+        return CellPlan(
+            arch, shape_name, fn, (pshapes, inputs), (psh, bsh),
+            n_params, n_params, shape.dims["batch"], "serve",
+        )
+
+
+# ---------------------------------------------------------------------------
+# RPQ (the paper's own system)
+# ---------------------------------------------------------------------------
+
+
+def rpq_cell(arch: str, shape_name: str, mesh: Mesh) -> CellPlan:
+    from repro.configs import alibaba_rpq as rq
+    from repro.core import automaton as am
+    from repro.core import regex as rx
+    from repro.core import strategies
+    from repro.graph import generators
+
+    spec = registry.get_arch(arch)
+    cfg: rq.RPQConfig = spec.full()
+    shape = spec.shapes[shape_name]
+    rules = shd.Rules.from_mesh(mesh)
+    site_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+    with shd.use_mesh(mesh):
+        # label vocabulary (no graph materialization needed for lowering)
+        labels = (
+            generators.C_LABELS + generators.A_LABELS + generators.I_LABELS
+            + [l for l in generators.E_LABELS if l not in generators.A_LABELS]
+            + generators.P_LABELS + generators.RARE_LABELS
+            + [f"cooc_{i}" for i in range(180)]
+        )
+        lmap = {n: i for i, n in enumerate(labels)}
+        query = generators.TABLE2_QUERIES[cfg.query]
+        ca = am.ground(am.build_nfa(rx.parse(query)), lmap)
+
+        if shape_name == "estimate":
+            from repro.core import estimation
+
+            n_roll = shape.dims["n_rollouts"]
+            n_states = ca.n_states
+            M = jax.ShapeDtypeStruct((n_states, n_states), jnp.float32)
+            B = jax.ShapeDtypeStruct((n_states,), jnp.float32)
+            keys = jax.eval_shape(lambda: jax.random.split(jax.random.key(0), n_roll))
+            flat = tuple(site_axes) + (("model",) if "model" in mesh.axis_names else ())
+
+            def fn(M, B, keys):
+                def one(key):
+                    def body(state):
+                        key, counts, q_bc, d_s2, lev = state
+                        key, k1 = jax.random.split(key)
+                        children = jax.random.poisson(k1, counts[:, None] * M)
+                        q_bc = q_bc + (counts * B).sum()
+                        d_s2 = d_s2 + 3.0 * children.sum()
+                        return key, children.sum(0).astype(jnp.float32), q_bc, d_s2, lev + 1
+
+                    def cond(state):
+                        _, counts, _, _, lev = state
+                        return jnp.logical_and(counts.sum() > 0, lev < 64)
+
+                    c0 = jnp.zeros((n_states,), jnp.float32).at[0].set(1.0)
+                    _, _, q_bc, d_s2, _ = jax.lax.while_loop(
+                        cond, body, (key, c0, jnp.float32(0), jnp.float32(0), jnp.int32(0))
+                    )
+                    return q_bc, d_s2
+
+                return jax.vmap(one)(keys)
+
+            return CellPlan(
+                arch, shape_name, fn, (M, B, keys),
+                (NamedSharding(mesh, P()), NamedSharding(mesh, P()),
+                 NamedSharding(mesh, P(flat))),
+                0, 0, n_roll, "serve",
+            )
+
+        # serve_queries: batched S2 executor over arbitrarily-placed edges
+        n_sites = cfg.n_sites
+        e_per_site = int(shape.dims["n_edges"] * cfg.replication_rate * 1.25)
+        e_per_site = -(-e_per_site // 128) * 128
+        inputs = rq.input_specs(cfg, shape, e_per_site)
+        fn = strategies.make_s2_step_fn(
+            ca, shape.dims["n_nodes"], mesh, site_axes, "model", cfg.max_levels
+        )
+        espec = P(site_axes, None)
+        in_sh = (
+            NamedSharding(mesh, espec), NamedSharding(mesh, espec),
+            NamedSharding(mesh, espec), NamedSharding(mesh, espec),
+            NamedSharding(mesh, P("model")),
+        )
+        return CellPlan(
+            arch, shape_name, fn,
+            (inputs["src"], inputs["lbl"], inputs["dst"], inputs["mask"], inputs["starts"]),
+            in_sh, 0, 0,
+            shape.dims["batch"] * shape.dims["n_edges"], "serve",
+        )
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh) -> CellPlan:
+    family = registry.get_arch(arch).family
+    builder = {"lm": lm_cell, "gnn": gnn_cell, "recsys": dlrm_cell, "rpq": rpq_cell}[family]
+    return builder(arch, shape_name, mesh)

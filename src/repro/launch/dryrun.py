@@ -1,0 +1,135 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input shape) cell, lower + compile the step
+function on the single-pod (16,16)=256-chip mesh and the multi-pod
+(2,16,16)=512-chip mesh, print ``memory_analysis()`` / ``cost_analysis()``,
+parse collective bytes from the optimized HLO, and append the roofline
+record to a JSON results file (read by EXPERIMENTS.md §Dry-run/§Roofline
+and benchmarks/roofline.py).
+
+Usage:
+  python -m repro.launch.dryrun --mesh single              # all cells
+  python -m repro.launch.dryrun --mesh multi --arch qwen3-14b --shape train_4k
+  python -m repro.launch.dryrun --list
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import registry
+from repro.dist import sharding as shd
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True) -> dict:
+    from repro.launch.cells import build_cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_devices = mesh.size
+    t0 = time.time()
+    with shd.use_mesh(mesh):
+        plan = build_cell(arch, shape_name, mesh)
+        jitted = jax.jit(plan.fn, in_shardings=plan.in_shardings)
+        lowered = jitted.lower(*plan.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    stats = analysis.analyze_compiled(compiled, n_devices)
+    mf = analysis.model_flops(
+        registry.get_arch(arch).family, plan.kind, plan.n_params, plan.n_active, plan.tokens
+    )
+    hlo_flops_global = stats["cost"]["flops_per_device"] * n_devices
+    stats["model_flops"] = mf
+    stats["useful_flops_ratio"] = (mf / hlo_flops_global) if hlo_flops_global else None
+    stats["times"] = {"lower_s": t_lower, "compile_s": t_compile}
+    stats["meta"] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi(2,16,16)" if multi_pod else "single(16,16)",
+        "n_devices": n_devices, "kind": plan.kind,
+        "n_params": plan.n_params, "n_active": plan.n_active, "tokens": plan.tokens,
+    }
+    if verbose:
+        ma = stats["memory"]
+        print(f"  memory_analysis: args={ma['argument_bytes']/2**30:.2f}GiB "
+              f"temp={ma['temp_bytes']/2**30:.2f}GiB out={ma['output_bytes']/2**30:.2f}GiB "
+              f"peak≈{ma['peak_estimate_bytes']/2**30:.2f}GiB/device")
+        print(f"  cost_analysis: {stats['cost']['flops_per_device']:.3e} flops/dev, "
+              f"{stats['cost']['bytes_per_device']:.3e} B/dev")
+        print(f"  collectives: {stats['collectives']}")
+        r = stats["roofline"]
+        print(f"  roofline: compute={r['compute_s']*1e3:.2f}ms memory={r['memory_s']*1e3:.2f}ms "
+              f"collective={r['collective_s']*1e3:.2f}ms -> {r['bottleneck']}-bound")
+    return stats
+
+
+def all_cells() -> list[tuple[str, str]]:
+    cells = []
+    for arch in registry.list_archs():
+        spec = registry.get_arch(arch)
+        for shape in spec.shapes:
+            cells.append((arch, shape))
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = all_cells()
+    if args.list:
+        for a, s in cells:
+            print(f"{a} × {s}")
+        return
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    try:
+        with open(args.out) as f:
+            results = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        results = {}
+
+    failures = []
+    for multi in meshes:
+        mesh_key = "multi" if multi else "single"
+        for arch, shape in cells:
+            key = f"{arch}|{shape}|{mesh_key}"
+            if args.skip_existing and key in results and results[key].get("ok"):
+                continue
+            print(f"[{mesh_key}] {arch} × {shape} ...", flush=True)
+            try:
+                stats = run_cell(arch, shape, multi)
+                results[key] = {"ok": True, **stats}
+            except Exception as e:  # noqa: BLE001 — report, keep sweeping
+                traceback.print_exc()
+                results[key] = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+                failures.append(key)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    print(f"\n{sum(1 for r in results.values() if r.get('ok'))} ok, {len(failures)} failed")
+    for k in failures:
+        print("  FAILED:", k)
+
+
+if __name__ == "__main__":
+    main()

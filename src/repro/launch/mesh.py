@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant — importing this module never touches
+jax device state (smoke tests see 1 device; only dryrun.py forces 512
+host devices via XLA_FLAGS before any jax import).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod (16, 16) = 256 chips, or 2-pod (2, 16, 16) = 512 chips.
+
+    ``pod`` is the outer data-parallel/replica axis; ``data`` carries batch
+    / site / ZeRO sharding; ``model`` carries tensor/expert/KV-sequence
+    parallelism (DESIGN.md §6)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over however many devices the test environment has."""
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
+    )

@@ -1,0 +1,337 @@
+"""Decoder-only transformer LMs (dense and MoE) with GQA + optional
+qk-norm — covers qwen3-14b/32b, internlm2-1.8b, granite-moe, kimi-k2.
+
+Layer stack is a ``lax.scan`` over stacked per-layer params (compile time
+stays flat in depth), with per-layer remat.  ``train_step`` does
+microbatched gradient accumulation (one psum'd update per step) and the
+optimizer update; ``prefill``/``decode_step`` serve with a KV cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.models import layers as L
+from repro.training import optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_q_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    qk_norm: bool = False
+    # MoE (n_experts=0 -> dense)
+    n_experts: int = 0
+    top_k: int = 0
+    rope_theta: float = 1e6
+    dtype: Any = jnp.bfloat16
+    # execution
+    microbatches: int = 1
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    remat: bool = True
+    optimizer: str = "adamw"
+    fsdp_experts: bool = False  # rest-shard expert d_ff over data axes (kimi)
+    vocab_pad: int = 256  # pad embed/lm_head so the vocab dim shards evenly
+
+    @property
+    def padded_vocab(self) -> int:
+        return -(-self.vocab // self.vocab_pad) * self.vocab_pad
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def param_count(self) -> int:
+        attn = self.d_model * (self.n_q_heads + 2 * self.n_kv_heads) * self.d_head
+        attn += self.n_q_heads * self.d_head * self.d_model
+        if self.is_moe:
+            mlp = self.n_experts * 3 * self.d_model * self.d_ff + self.d_model * self.n_experts
+        else:
+            mlp = 3 * self.d_model * self.d_ff
+        per_layer = attn + mlp + 2 * self.d_model
+        return self.n_layers * per_layer + 2 * self.vocab * self.d_model
+
+    def active_param_count(self) -> int:
+        if not self.is_moe:
+            return self.param_count()
+        attn = self.d_model * (self.n_q_heads + 2 * self.n_kv_heads) * self.d_head
+        attn += self.n_q_heads * self.d_head * self.d_model
+        mlp = self.top_k * 3 * self.d_model * self.d_ff + self.d_model * self.n_experts
+        per_layer = attn + mlp + 2 * self.d_model
+        return self.n_layers * per_layer + 2 * self.vocab * self.d_model
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: LMConfig, key) -> dict:
+    kE, kH, kL = jax.random.split(key, 3)
+    d = cfg.d_model
+
+    def layer(key):
+        k1, k2 = jax.random.split(key)
+        p = {
+            "attn": L.init_attention(
+                k1, d, cfg.n_q_heads, cfg.n_kv_heads, cfg.d_head, cfg.qk_norm, cfg.dtype
+            ),
+            "ln1": jnp.ones((d,), jnp.float32),
+            "ln2": jnp.ones((d,), jnp.float32),
+        }
+        if cfg.is_moe:
+            p["moe"] = L.init_moe(k2, d, cfg.d_ff, cfg.n_experts, cfg.dtype)
+        else:
+            p["mlp"] = L.init_mlp(k2, d, cfg.d_ff, cfg.dtype)
+        return p
+
+    layer_keys = jax.random.split(kL, cfg.n_layers)
+    layers = jax.vmap(layer)(layer_keys)  # stacked: leading L dim on every leaf
+    emb_scale = 1.0 / (d**0.5)
+    return {
+        "embed": (jax.random.normal(kE, (cfg.padded_vocab, d)) * emb_scale).astype(cfg.dtype),
+        "lm_head": (jax.random.normal(kH, (d, cfg.padded_vocab)) * emb_scale).astype(cfg.dtype),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "layers": layers,
+    }
+
+
+def param_specs(cfg: LMConfig, rules: shd.Rules) -> dict:
+    a = {
+        "wq": rules.p_attn_in(),
+        "wk": rules.p_attn_in(),
+        "wv": rules.p_attn_in(),
+        "wo": rules.p_attn_out(),
+    }
+    if cfg.qk_norm:
+        a["q_norm"] = P(None, None)
+        a["k_norm"] = P(None, None)
+    layers = {"attn": a, "ln1": P(None, None), "ln2": P(None, None)}
+    if cfg.is_moe:
+        if cfg.fsdp_experts and rules.batch_axes:
+            e_in = P(None, rules.model_axis, None, rules.batch_axes)
+            e_out = P(None, rules.model_axis, rules.batch_axes, None)
+        else:
+            e_in = e_out = rules.p_moe_experts()
+        layers["moe"] = {
+            "router": rules.p_router(),
+            "w_gate": e_in,
+            "w_up": e_in,
+            "w_down": e_out,
+        }
+    else:
+        layers["mlp"] = {
+            "w_gate": rules.p_mlp_in(),
+            "w_up": rules.p_mlp_in(),
+            "w_down": rules.p_mlp_out(),
+        }
+    return {
+        "embed": rules.p_embed(),
+        "lm_head": rules.p_lm_head(),
+        "final_norm": P(None),
+        "layers": layers,
+    }
+
+
+def param_shapes(cfg: LMConfig) -> dict:
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _layer_fwd(cfg: LMConfig, rules: shd.Rules, x, lp, positions):
+    h = L.rmsnorm(x, lp["ln1"])
+    q, k, v = L.apply_attention_proj(
+        lp["attn"], h, cfg.n_q_heads, cfg.n_kv_heads, cfg.d_head, positions, rules, cfg.rope_theta
+    )
+    attn = L.chunked_attention(
+        q, k, v, causal=True, q_chunk=min(cfg.q_chunk, q.shape[1]),
+        kv_chunk=min(cfg.kv_chunk, k.shape[1]),
+    )
+    B, S, _, _ = attn.shape
+    x = x + (attn.reshape(B, S, -1) @ lp["attn"]["wo"])
+    x = shd.constrain(x, rules.act_btd())
+    h = L.rmsnorm(x, lp["ln2"])
+    if cfg.is_moe:
+        y = L.apply_moe(lp["moe"], h, n_experts=cfg.n_experts, top_k=cfg.top_k, rules=rules, fsdp=cfg.fsdp_experts)
+    else:
+        y = L.apply_mlp(lp["mlp"], h, rules)
+    x = x + y
+    return shd.constrain(x, rules.act_btd())
+
+
+def forward(cfg: LMConfig, rules: shd.Rules, params, tokens):
+    """tokens (B, S) -> logits (B, S, V)."""
+    return hidden_states(cfg, rules, params, tokens) @ params["lm_head"]
+
+
+def loss_fn(cfg: LMConfig, rules: shd.Rules, params, tokens, labels):
+    x = hidden_states(cfg, rules, params, tokens)
+    return L.chunked_cross_entropy(
+        x, params["lm_head"], labels, rules, n_valid=cfg.vocab
+    )
+
+
+def hidden_states(cfg: LMConfig, rules: shd.Rules, params, tokens):
+    """Final-norm hidden states (B, S, D) — forward() minus the lm_head."""
+    B, S = tokens.shape
+    x = shd.constrain(params["embed"][tokens].astype(cfg.dtype), rules.act_btd())
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    step = partial(_layer_fwd, cfg, rules)
+    if cfg.remat:
+        step = jax.checkpoint(step, static_argnums=())
+
+    def scan_body(x, lp):
+        return step(x, lp, positions), None
+
+    x, _ = jax.lax.scan(scan_body, x, params["layers"])
+    return L.rmsnorm(x, params["final_norm"])
+
+
+# ---------------------------------------------------------------------------
+# Train / serve steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: LMConfig, rules: shd.Rules):
+    optimizer = opt_lib.get(cfg.optimizer)
+
+    def train_step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        B = tokens.shape[0]
+        n_micro = cfg.microbatches
+        mb = B // n_micro
+
+        def micro(g_acc, i):
+            t = jax.lax.dynamic_slice_in_dim(tokens, i * mb, mb, 0)
+            l = jax.lax.dynamic_slice_in_dim(labels, i * mb, mb, 0)
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, rules, p, t, l)
+            )(params)
+            g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+            return g_acc, loss
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, rules, p, tokens, labels)
+            )(params)
+            losses = loss[None]
+        else:
+            grads, losses = jax.lax.scan(micro, g0, jnp.arange(n_micro))
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+        new_params, new_opt = optimizer.update(params, grads, opt_state)
+        return new_params, new_opt, losses.mean()
+
+    return train_step
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int):
+    return {
+        "k": jnp.zeros(
+            (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head), cfg.dtype
+        ),
+        "v": jnp.zeros(
+            (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head), cfg.dtype
+        ),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: LMConfig, rules: shd.Rules, seq_sharded: bool) -> dict:
+    spec = rules.kv_cache_seq_sharded() if seq_sharded else rules.kv_cache()
+    return {"k": spec, "v": spec, "len": P()}
+
+
+def make_prefill(cfg: LMConfig, rules: shd.Rules):
+    """tokens (B, S) -> (last-token logits, populated KV cache)."""
+
+    def prefill(params, tokens):
+        B, S = tokens.shape
+        x = shd.constrain(params["embed"][tokens].astype(cfg.dtype), rules.act_btd())
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(x, lp):
+            h = L.rmsnorm(x, lp["ln1"])
+            q, k, v = L.apply_attention_proj(
+                lp["attn"], h, cfg.n_q_heads, cfg.n_kv_heads, cfg.d_head,
+                positions, rules, cfg.rope_theta,
+            )
+            attn = L.chunked_attention(
+                q, k, v, causal=True,
+                q_chunk=min(cfg.q_chunk, S), kv_chunk=min(cfg.kv_chunk, S),
+            )
+            x = x + (attn.reshape(B, S, -1) @ lp["attn"]["wo"])
+            h = L.rmsnorm(x, lp["ln2"])
+            if cfg.is_moe:
+                y = L.apply_moe(lp["moe"], h, n_experts=cfg.n_experts, top_k=cfg.top_k, rules=rules, fsdp=cfg.fsdp_experts)
+            else:
+                y = L.apply_mlp(lp["mlp"], h, rules)
+            x = shd.constrain(x + y, rules.act_btd())
+            return x, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+        x = L.rmsnorm(x[:, -1:], params["final_norm"])
+        logits = x @ params["lm_head"]
+        cache = {"k": ks, "v": vs, "len": jnp.int32(S)}
+        return logits[:, 0], cache
+
+    return prefill
+
+
+def make_decode_step(cfg: LMConfig, rules: shd.Rules, seq_sharded: bool = False):
+    """One token per sequence against the KV cache (the serve_step lowered
+    by decode_32k / long_500k)."""
+    kv_spec = (rules.kv_cache_seq_sharded() if seq_sharded else rules.kv_cache())
+
+    def decode_step(params, cache, tokens):
+        B = tokens.shape[0]
+        pos = cache["len"]
+        x = params["embed"][tokens].astype(cfg.dtype).reshape(B, 1, cfg.d_model)
+        positions = jnp.full((B, 1), pos, jnp.int32)
+
+        def body(carry, inputs):
+            x, = carry
+            lp, k_cache, v_cache = inputs
+            h = L.rmsnorm(x, lp["ln1"])
+            q, k, v = L.apply_attention_proj(
+                lp["attn"], h, cfg.n_q_heads, cfg.n_kv_heads, cfg.d_head,
+                positions, rules, cfg.rope_theta,
+            )
+            k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, pos, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, pos, axis=1)
+            k_cache = shd.constrain(k_cache, P(*tuple(kv_spec)[1:]))
+            v_cache = shd.constrain(v_cache, P(*tuple(kv_spec)[1:]))
+            attn = L.decode_attention(q, k_cache, v_cache, pos + 1)
+            x = x + (attn.reshape(B, 1, -1) @ lp["attn"]["wo"])
+            h = L.rmsnorm(x, lp["ln2"])
+            if cfg.is_moe:
+                y = L.apply_moe(lp["moe"], h, n_experts=cfg.n_experts, top_k=cfg.top_k, rules=rules, fsdp=cfg.fsdp_experts)
+            else:
+                y = L.apply_mlp(lp["mlp"], h, rules)
+            return (x + y,), (k_cache, v_cache)
+
+        (x,), (ks, vs) = jax.lax.scan(body, (x,), (params["layers"], cache["k"], cache["v"]))
+        x = L.rmsnorm(x, params["final_norm"])
+        logits = (x @ params["lm_head"])[:, 0]
+        new_cache = {"k": ks, "v": vs, "len": pos + 1}
+        return logits, new_cache
+
+    return decode_step

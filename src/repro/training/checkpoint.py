@@ -1,0 +1,124 @@
+"""Step-atomic checkpointing with elastic restore.
+
+Layout per checkpoint:
+
+    <dir>/step_<n>/
+        manifest.json        # pytree structure, shapes, dtypes, step
+        shard_<i>.npz        # flat-leaf arrays (chunked)
+        COMMIT               # written last — a checkpoint without COMMIT
+                             # is torn and ignored by ``latest_step``
+
+Restore is *elastic*: arrays are saved unsharded (gathered) with their
+logical shapes, so a checkpoint taken on a 256-chip mesh restores onto
+512 chips, 8 chips, or 1 CPU device — the new ``in_shardings`` re-shard
+on first use (DESIGN.md §6).  For multi-controller deployments the same
+manifest format extends to per-host shard files; this single-controller
+implementation writes from host 0.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+_COMMIT = "COMMIT"
+_CHUNK = 64  # leaves per npz shard
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree) -> str:
+    """Write a step-atomic checkpoint; returns the step directory."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp_dir = step_dir + ".tmp"
+    if os.path.exists(tmp_dir):
+        shutil.rmtree(tmp_dir)
+    os.makedirs(tmp_dir, exist_ok=True)
+
+    paths, leaves, _ = _flatten_with_paths(tree)
+    manifest = {
+        "step": step,
+        "leaves": [
+            {"path": p, "shape": list(np.shape(l)), "dtype": str(jnp.asarray(l).dtype)}
+            for p, l in zip(paths, leaves)
+        ],
+        "n_shards": -(-len(leaves) // _CHUNK),
+    }
+    for si in range(manifest["n_shards"]):
+        chunk = leaves[si * _CHUNK : (si + 1) * _CHUNK]
+        names = [f"a{si * _CHUNK + j}" for j in range(len(chunk))]
+        np.savez(
+            os.path.join(tmp_dir, f"shard_{si}.npz"),
+            **{n: np.asarray(c) for n, c in zip(names, chunk)},
+        )
+    with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp_dir, _COMMIT), "w") as f:
+        f.write("ok")
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.rename(tmp_dir, step_dir)
+    return step_dir
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    """Most recent *committed* step, ignoring torn checkpoints."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, _COMMIT)):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
+    """Restore into the structure of ``like_tree`` (pytree of arrays or
+    ShapeDtypeStructs).  ``shardings`` (optional pytree of NamedSharding)
+    re-shards each leaf for the *current* mesh — the elastic path."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    flat_arrays: list[np.ndarray] = [None] * len(manifest["leaves"])  # type: ignore
+    for si in range(manifest["n_shards"]):
+        with np.load(os.path.join(step_dir, f"shard_{si}.npz")) as z:
+            for name in z.files:
+                flat_arrays[int(name[1:])] = z[name]
+
+    paths, leaves, treedef = _flatten_with_paths(like_tree)
+    saved_by_path = {m["path"]: i for i, m in enumerate(manifest["leaves"])}
+    out = []
+    for p, leaf in zip(paths, leaves):
+        arr = flat_arrays[saved_by_path[p]]
+        out.append(jnp.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if s is not None else x, tree, shardings
+        )
+    return tree
+
+
+def prune(ckpt_dir: str, keep: int = 3) -> None:
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(
+        int(n.split("_")[1])
+        for n in os.listdir(ckpt_dir)
+        if n.startswith("step_") and not n.endswith(".tmp")
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)

@@ -1,0 +1,74 @@
+"""Fault-tolerant training loop.
+
+Checkpoint/restart semantics: the loop always begins from
+``checkpoint.latest_step`` (None → fresh init), saves every
+``ckpt_every`` steps atomically, and is *idempotent* — killing the
+process at any point and rerunning converges to the same trajectory
+because the data pipeline is deterministic in (seed, step) and the
+checkpoint is step-atomic.  ``tests/test_fault_tolerance.py`` kills the
+loop mid-run and asserts bit-identical recovery vs an uninterrupted run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro.training import checkpoint
+
+
+@dataclasses.dataclass
+class TrainLoopResult:
+    params: Any
+    opt_state: Any
+    losses: list[float]
+    start_step: int
+    end_step: int
+
+
+def run(
+    *,
+    init_fn: Callable[[], tuple[Any, Any]],
+    train_step: Callable,
+    batch_fn: Callable[[int], Any],
+    n_steps: int,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 10,
+    keep: int = 3,
+    crash_at_step: int | None = None,
+    log_every: int = 0,
+) -> TrainLoopResult:
+    """Run (or resume) training.  ``crash_at_step`` simulates a node
+    failure (raises) for the fault-tolerance tests."""
+    start = 0
+    params = opt_state = None
+    if ckpt_dir is not None:
+        latest = checkpoint.latest_step(ckpt_dir)
+        if latest is not None:
+            like = jax.eval_shape(init_fn)
+            state = checkpoint.restore(ckpt_dir, latest, like)
+            params, opt_state = state
+            start = latest
+    if params is None:
+        params, opt_state = init_fn()
+
+    step_fn = jax.jit(train_step)
+    losses: list[float] = []
+    for step in range(start, n_steps):
+        if crash_at_step is not None and step == crash_at_step:
+            raise RuntimeError(f"simulated node failure at step {step}")
+        batch = batch_fn(step)
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        losses.append(float(loss))
+        if log_every and step % log_every == 0:
+            print(f"step {step}: loss {float(loss):.4f}", flush=True)
+        if ckpt_dir is not None and (step + 1) % ckpt_every == 0:
+            checkpoint.save(ckpt_dir, step + 1, (params, opt_state))
+            checkpoint.prune(ckpt_dir, keep=keep)
+    if ckpt_dir is not None:
+        checkpoint.save(ckpt_dir, n_steps, (params, opt_state))
+        checkpoint.prune(ckpt_dir, keep=keep)
+    return TrainLoopResult(params, opt_state, losses, start, n_steps)

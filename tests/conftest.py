@@ -1,0 +1,7 @@
+"""Test configuration: keep the default 1-device CPU environment (the
+dry-run forces 512 devices in its own process, never here)."""
+
+import os
+
+# determinism for hypothesis + numpy in CI-like runs
+os.environ.setdefault("JAX_ENABLE_X64", "0")

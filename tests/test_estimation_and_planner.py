@@ -1,0 +1,122 @@
+"""Cost model (Eqs. 1–3), statistical estimators (§5), and planner (§6)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import cost_model, estimation, paa, planner, strategies
+from repro.core import regex as rx
+from repro.graph.generators import gilbert_graph, random_labeled_graph
+from repro.graph.partition import distribute, random_overlay
+from repro.graph.structure import example_graph
+
+
+def test_network_params_validation():
+    cost_model.NetworkParams(100, 300, 0.2).validate()
+    with pytest.raises(ValueError):
+        cost_model.NetworkParams(100, 300, 1.5).validate()  # k >= 1
+    with pytest.raises(ValueError):
+        cost_model.NetworkParams(100, 50, 0.2).validate()  # d < 1
+
+
+def test_eq3_consistency_with_direct_costs():
+    """choose_strategy's Eq.-3 decision == comparing Eqs. 1 and 2 directly."""
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        q_lbl = rng.integers(1, 20)
+        d_s1 = rng.integers(1, 5000)
+        q_bc = rng.integers(0, 300)
+        d_s2 = rng.integers(0, int(d_s1) + 1)
+        k = rng.uniform(0.01, 0.95)
+        d = rng.uniform(1.05, 8.0)
+        net = cost_model.NetworkParams(100, int(100 * d), k)
+        c1 = cost_model.cost_s1(net, q_lbl, d_s1)
+        c2 = cost_model.cost_s2(net, q_bc, d_s2)
+        choice = cost_model.choose_strategy(
+            net,
+            strategies.StrategyCost("S1", q_lbl, d_s1),
+            strategies.StrategyCost("S2", q_bc, d_s2),
+        )
+        if abs(c1 - c2) / max(c1, c2) > 1e-9:
+            assert (choice.strategy == "S2") == (c2 < c1), (c1, c2, choice)
+
+
+def test_discriminant_special_cases():
+    assert cost_model.discriminant(5, 100, 4, 50) == -math.inf  # Q_bc <= Q_lbl
+    assert cost_model.discriminant(5, 50, 50, 50) == math.inf  # D_s1 <= D_s2
+    d = cost_model.discriminant(18, 1800, 70, 15)
+    assert abs(d - 2 * (70 - 18) / (1800 - 15)) < 1e-12
+
+
+def test_scenario6_numbers():
+    """The paper's worked example: discr_low = 2(70-18)/(1800-15) ≈ 0.058,
+    k/d = 0.2/3 ≈ 0.067 > discr → S1 better at those estimates."""
+    disc = cost_model.discriminant(18, 1800, 70, 15)
+    assert abs(disc - 0.0583) < 1e-3
+    assert 0.2 / 3 > disc
+
+
+def test_gilbert_model_self_consistency():
+    """Fitted on a graph sampled FROM the Gilbert model, the estimator's
+    mean first-step edge count matches the true rate."""
+    probs = {"a": 3e-4, "b": 1e-4}
+    g = gilbert_graph(400, probs, seed=1)
+    gm = estimation.GilbertModel.fit(g)
+    ca = paa.compile_query("a", g)
+    rolls = estimation.estimate_distribution(ca, gm, 4000, seed=2)
+    mean_edges = np.mean([r.edges_traversed for r in rolls])
+    true_rate = probs["a"] * 400  # expected out-degree
+    assert abs(mean_edges - true_rate) / true_rate < 0.35
+
+
+def test_bayesian_conditional_rates():
+    """On a 2-hop chain graph (a-edges into hub nodes that carry b-edges),
+    λ_{b|a} must exceed the unconditional λ_b."""
+    src = np.array([0, 1, 2, 3, 10, 10, 11, 11], np.int32)
+    lbl = np.array([0, 0, 0, 0, 1, 1, 1, 1], np.int32)
+    dst = np.array([10, 10, 11, 11, 20, 21, 22, 23], np.int32)
+    from repro.graph.structure import LabeledGraph
+
+    g = LabeledGraph(30, src, lbl, dst, ["a", "b"])
+    bm = estimation.BayesianModel.fit(g)
+    assert bm.lam_cond[0, 1] > bm.lam0[1]  # arriving via a => b-out much likelier
+    assert bm.lam_cond[0, 1] == pytest.approx(2.0)  # each hub has 2 b-edges
+
+
+def test_branching_matches_bfs_rollouts_subcritical():
+    g = example_graph()
+    gm = estimation.GilbertModel.fit(g)
+    ca = paa.compile_query("a b", g)
+    rolls = estimation.estimate_distribution(ca, gm, 3000, seed=3)
+    bq, bd = estimation.branching_tail(ca, gm, n_rollouts=3000, seed=3)
+    m_bfs = np.mean([r.d_s2 for r in rolls])
+    m_br = bd.mean()
+    # branching ignores dedup => upper bound, but close in subcritical regime
+    assert m_br >= m_bfs * 0.8
+    assert m_br <= m_bfs * 3.0 + 1.0
+
+
+def test_planner_end_to_end():
+    g = random_labeled_graph(300, 1500, 5, seed=4)
+    net = random_overlay(60, 3.0, seed=4)
+    placement = distribute(g, 60, replication_rate=0.15, seed=4)
+    params = planner.probe_network(net, placement)
+    plan = planner.plan_query("l0 l1* l2", g, params, n_rollouts=400, seed=4)
+    assert plan.choice.strategy in ("S1", "S2")
+    assert plan.s2_cost_cap >= 1
+    assert plan.forecast_symbols["S1"] > 0
+    assert 0.0 <= plan.p_s2_optimal <= 1.0
+
+
+def test_embedding_placement_rule():
+    small = planner.embedding_placement(10_000, 128, 65536, 256)
+    big = planner.embedding_placement(40_000_000, 128, 65536, 256)
+    assert small.mode == "replicate"
+    assert big.mode == "shard"
+
+
+def test_gnn_halo_rule():
+    net = cost_model.NetworkParams(100, 300, 0.2)
+    deep = planner.gnn_halo_strategy(3, 15.0, 1024, 100_000, net)
+    assert deep.mode in ("shard", "replicate")

@@ -1,0 +1,100 @@
+"""PAA correctness against the paper's §2.4 worked examples (Fig. 1a graph)."""
+
+import numpy as np
+import pytest
+
+from repro.core import automaton as am
+from repro.core import paa
+from repro.core import regex as rx
+from repro.graph.structure import example_graph, to_device_graph
+
+
+@pytest.fixture(scope="module")
+def g():
+    return example_graph()
+
+
+@pytest.fixture(scope="module")
+def dg(g):
+    return to_device_graph(g)
+
+
+def _n(ids):  # 1-based paper node ids -> 0-based
+    return sorted(i - 1 for i in ids)
+
+
+def test_example_graph_label_frequencies(g):
+    # §2.8: a and b occur 6 times each, c occurs 3 times
+    counts = dict(zip(g.labels, g.label_counts()))
+    assert counts == {"a": 6, "b": 6, "c": 3}
+
+
+def test_q1_single_source(g, dg):
+    # Q1 = (1, a*bb) -> nodes 5 and 8
+    ca = paa.compile_query("a* b b", g)
+    acc = np.asarray(paa.answers_single_source(ca, dg, 0))
+    assert sorted(np.nonzero(acc)[0].tolist()) == _n([5, 8])
+
+
+def test_q2_multi_source(g, dg):
+    # Q2 = ac(a|b) -> (1,5),(9,5),(1,8),(9,8),(2,7)
+    ca = paa.compile_query("a c (a|b)", g)
+    starts = paa.valid_start_nodes(ca, g)
+    srcs, dsts = paa.answers_multi_source(ca, dg, starts)
+    pairs = sorted(zip(srcs.tolist(), dsts.tolist()))
+    expected = sorted([(0, 4), (8, 4), (0, 7), (8, 7), (1, 6)])
+    assert pairs == expected
+
+
+def test_qi3_inverse(g, dg):
+    # QI3 = (1, a*b^-1) -> nodes 4 and 7
+    ca = paa.compile_query("a* b^-1", g)
+    assert ca.uses_inverse
+    acc = np.asarray(paa.answers_single_source(ca, dg, 0))
+    assert sorted(np.nonzero(acc)[0].tolist()) == _n([4, 7])
+
+
+def test_cycle_termination(g, dg):
+    # infinite path family via cycle 2-6-9-2 must still terminate (monotone visited set)
+    ca = paa.compile_query("a*", g)
+    acc = np.asarray(paa.answers_single_source(ca, dg, 0))
+    # a* from node 1: {1 (eps), 2, 6, 9, 5}
+    assert sorted(np.nonzero(acc)[0].tolist()) == _n([1, 2, 5, 6, 9])
+
+
+def test_instrumented_matches_jax(g, dg):
+    index = paa.HostIndex(g)
+    for expr in ["a* b b", "a c (a|b)", "a* b^-1", "a+", "(a|b)* c"]:
+        ca = paa.compile_query(expr, g)
+        for start in range(g.n_nodes):
+            trace = paa.run_instrumented(ca, index, start)
+            acc = np.asarray(paa.answers_single_source(ca, dg, start))
+            jax_ans = set(np.nonzero(acc)[0].tolist())
+            assert trace.answers == jax_ans, (expr, start)
+
+
+def test_wildcard(g, dg):
+    ca = paa.compile_query(". .", g)
+    acc = np.asarray(paa.answers_single_source(ca, dg, 0))
+    index = paa.HostIndex(g)
+    trace = paa.run_instrumented(ca, index, 0)
+    assert set(np.nonzero(acc)[0].tolist()) == trace.answers
+
+
+def test_label_class(g, dg):
+    # the paper's class syntax: {a|b} behaves as (a|b)
+    ca1 = paa.compile_query("{a|b}+", g)
+    ca2 = paa.compile_query("(a|b)+", g)
+    for start in range(g.n_nodes):
+        a1 = np.asarray(paa.answers_single_source(ca1, dg, start))
+        a2 = np.asarray(paa.answers_single_source(ca2, dg, start))
+        assert (a1 == a2).all()
+
+
+def test_query_introspection():
+    ast = rx.parse('C+ "acetylation" A+')
+    assert rx.labels_of(ast) == {"C", "acetylation", "A"}
+    assert not rx.has_wildcard(ast)
+    assert rx.has_wildcard(rx.parse("a . b"))
+    nfa = am.build_nfa("a* b b")
+    assert nfa.n_states <= 6  # O(m) states

