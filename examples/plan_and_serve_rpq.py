@@ -14,9 +14,8 @@ import argparse
 
 import numpy as np
 
-import jax
-
 from repro.core import paa, planner, strategies
+from repro.dist import compat
 from repro.core import regex as rx
 from repro.graph import generators
 from repro.graph.partition import distribute, random_overlay
@@ -40,8 +39,7 @@ def main() -> None:
     params = planner.probe_network(net, placement)
     print(f"probed: N_p={params.n_peers} N_c={params.n_connections} k̂={params.replication_rate:.3f}")
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     exec_placement = distribute(g, 4, replication_rate=0.3, seed=2)
     dg = to_device_graph(g)
 

@@ -17,7 +17,8 @@ Strategies:
   its degenerate bound — modeled analytically from placement statistics.
 
 Execution vs accounting (DESIGN.md §2): the *executors* run S1/S2 with
-real mesh collectives via ``jax.shard_map`` (sites = the ``data`` axis;
+real mesh collectives via ``repro.dist.sharding.shard_map`` (sites = the
+``data`` axis;
 the query batch = the ``model`` axis); the *meters* count message symbols
 with the paper's cost conventions (a symbol = one node id or label; an
 edge = 3 symbols; broadcasting b symbols costs 2·N_c·b messages).
@@ -35,6 +36,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import paa
+from repro.dist import sharding as shd
 from repro.core.automaton import FWD, CompiledAutomaton
 from repro.core.regex import Node, has_wildcard, labels_of, query_size
 from repro.graph.partition import OverlayNetwork, Placement
@@ -220,11 +222,12 @@ def s1_gather(
         return src, lbl, dst, match, overflow.sum()[None]
 
     spec_e = P(site_axes, None)
-    fn = jax.shard_map(
+    fn = shd.shard_map(
         local,
         mesh=mesh,
         in_specs=(spec_e, spec_e, spec_e, spec_e, P()),
         out_specs=(spec_e, spec_e, spec_e, spec_e, P(site_axes)),
+        check_vma=True,
     )
     src, lbl, dst, valid, overflow = fn(
         jnp.asarray(site_arrays["src"]),
@@ -391,12 +394,15 @@ def make_s2_step_fn(
 
     spec_e = P(site_axes, None)
     spec_b = P(batch_axis) if batch_axis else P()
+    # check_vma=False is required: JAX 0.4.x has no replication rule for
+    # the BFS while_loop (NotImplementedError under check_rep=True)
     return jax.jit(
-        jax.shard_map(
+        shd.shard_map(
             local,
             mesh=mesh,
             in_specs=(spec_e, spec_e, spec_e, spec_e, spec_b),
             out_specs=P(batch_axis, None) if batch_axis else P(None, None),
+            check_vma=False,
         )
     )
 

@@ -1,0 +1,6 @@
+"""Distributed execution layer: mesh compatibility shims and declarative
+sharding rules (``repro.dist.compat`` / ``repro.dist.sharding``)."""
+
+from repro.dist import compat, sharding
+
+__all__ = ["compat", "sharding"]

@@ -10,6 +10,7 @@ code JITs to MXU tile products.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import numpy as np
 
@@ -46,6 +47,27 @@ def make_blocked_graph(graph: LabeledGraph, block_size: int = 128) -> BlockedGra
     return BlockedGraph(graph.n_nodes, v_pad, block_size, fwd, inv)
 
 
+@partial(jax.jit, static_argnames=("block_size", "interpret"))
+def _expand_one(frontier_row, tiles, rows, cols, *, block_size, interpret):
+    """One (transition × label adjacency) block product, jitted.
+
+    jit's cache is keyed on the argument *shapes* plus the static args, so
+    each distinct (v_pad, nnz, block_size) combination traces the
+    interpret-mode Pallas kernel exactly once per process — without this,
+    every transition of every level of every graph re-traced it (the
+    test_frontier_random_graph_sweep hang).  Only one frontier row is
+    expanded per transition, so the kernel's row dim is the tile minimum
+    (8) regardless of automaton size — keeping the cache key independent
+    of n_states."""
+    row_sel = (
+        jnp.zeros((8, frontier_row.shape[0]), jnp.float32).at[0].set(frontier_row)
+    )
+    counts = frontier_step_blocks(
+        row_sel, tiles, rows, cols, block_size, interpret=interpret
+    )
+    return jnp.minimum(counts[0], 1.0)
+
+
 def expand_level(
     ca: CompiledAutomaton,
     bg: BlockedGraph,
@@ -53,8 +75,6 @@ def expand_level(
     interpret: bool = True,
 ) -> jnp.ndarray:
     """One BFS level over all grounded transitions; returns new 0/1 mask."""
-    m_pad = -(-ca.n_states // 8) * 8
-    fpad = jnp.zeros((m_pad, bg.v_pad), jnp.float32).at[: ca.n_states].set(frontier)
     out = jnp.zeros((ca.n_states, bg.v_pad), jnp.float32)
     for t in ca.transitions:
         store = bg.fwd if t.direction == FWD else bg.inv
@@ -66,13 +86,11 @@ def expand_level(
             if entry is None:
                 continue
             tiles, rows, cols = entry
-            row_sel = jnp.zeros((m_pad, bg.v_pad), jnp.float32).at[0].set(
-                fpad[t.src]
+            counts = _expand_one(
+                frontier[t.src], tiles, rows, cols,
+                block_size=bg.block_size, interpret=interpret,
             )
-            counts = frontier_step_blocks(
-                row_sel, tiles, rows, cols, bg.block_size, interpret=interpret
-            )
-            out = out.at[t.dst].max(jnp.minimum(counts[0], 1.0))
+            out = out.at[t.dst].max(counts)
     return (out > 0).astype(jnp.float32)
 
 

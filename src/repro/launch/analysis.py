@@ -14,6 +14,8 @@ from __future__ import annotations
 import dataclasses
 import re
 
+from repro.dist import compat
+
 PEAK_FLOPS = 197e12  # bf16 per chip
 HBM_BW = 819e9  # bytes/s per chip
 ICI_BW = 50e9  # bytes/s per link (we charge 1 link per chip, conservative)
@@ -116,7 +118,7 @@ class Roofline:
 def analyze_compiled(compiled, n_devices: int) -> dict:
     """Extract memory/cost/collective numbers from one compiled artifact."""
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = compat.cost_analysis_dict(compiled)
     text = compiled.as_text()
     coll = collective_bytes(text)
     flops = float(ca.get("flops", 0.0))

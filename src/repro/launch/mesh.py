@@ -3,12 +3,14 @@
 A FUNCTION, not a module constant — importing this module never touches
 jax device state (smoke tests see 1 device; only dryrun.py forces 512
 host devices via XLA_FLAGS before any jax import).
+
+All mesh construction goes through :func:`repro.dist.compat.make_mesh`,
+which handles the ``AxisType``/``axis_types`` JAX-version drift.
 """
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.dist import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -19,11 +21,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     parallelism (DESIGN.md §6)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_test_mesh(n_data: int = 1, n_model: int = 1):
     """Small mesh over however many devices the test environment has."""
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
-    )
+    return compat.make_mesh((n_data, n_model), ("data", "model"))

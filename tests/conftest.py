@@ -1,7 +1,50 @@
 """Test configuration: keep the default 1-device CPU environment (the
-dry-run forces 512 devices in its own process, never here)."""
+dry-run forces 512 devices in its own process, never here), and fail any
+single test that runs longer than REPRO_TEST_TIMEOUT seconds.
+
+The timeout is SIGALRM-based (pytest-timeout is not in the image): the
+alarm raises in the main thread at the next bytecode boundary, which
+catches the retracing/driver-level hangs this repo has actually had.  A
+test stuck inside one long-running C call is covered by the coarser
+``faulthandler_timeout`` in pyproject.toml.
+"""
 
 import os
+import signal
+
+import pytest
 
 # determinism for hypothesis + numpy in CI-like runs
 os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+TEST_TIMEOUT_S = int(os.environ.get("REPRO_TEST_TIMEOUT", "300"))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "timeout_s(seconds): per-test override of the default SIGALRM timeout",
+    )
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    marker = item.get_closest_marker("timeout_s")
+    timeout_s = int(marker.args[0]) if marker else TEST_TIMEOUT_S
+    if timeout_s <= 0 or not hasattr(signal, "SIGALRM"):
+        yield
+        return
+
+    def _on_timeout(signum, frame):
+        raise TimeoutError(
+            f"{item.nodeid} exceeded {timeout_s}s "
+            f"(set REPRO_TEST_TIMEOUT or @pytest.mark.timeout_s to override)"
+        )
+
+    old_handler = signal.signal(signal.SIGALRM, _on_timeout)
+    signal.setitimer(signal.ITIMER_REAL, timeout_s)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0)
+        signal.signal(signal.SIGALRM, old_handler)

@@ -5,6 +5,26 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+# Minimal child env. JAX_PLATFORMS=cpu is load-bearing: without it the
+# TPU PJRT plugin probes GCP instance metadata with 30 network retries
+# per variable at import — the seed's "silent 10-minute stall".
+CHILD_ENV = {
+    "PYTHONPATH": "src",
+    "PATH": "/usr/bin:/bin:/usr/local/bin",
+    "HOME": "/root",
+    "JAX_PLATFORMS": "cpu",
+}
+
+# generous for 8 forced host devices + shard_map compiles, but far below
+# the old silent 20-minute stall
+SUBPROCESS_TIMEOUT_S = 600
+
+# the subprocess timeout must fire before the conftest SIGALRM so the
+# child's stdout/stderr reach the failure message
+pytestmark = pytest.mark.timeout_s(SUBPROCESS_TIMEOUT_S + 60)
+
 
 def test_executors_on_8_devices():
     script = textwrap.dedent(
@@ -15,13 +35,13 @@ def test_executors_on_8_devices():
         import jax
         from repro.core import paa, strategies
         from repro.core import regex as rx
+        from repro.dist import compat
         from repro.graph.generators import random_labeled_graph
         from repro.graph.partition import distribute
         from repro.graph.structure import to_device_graph
 
         assert len(jax.devices()) == 8
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
         g = random_labeled_graph(48, 200, 4, seed=9)
         placement = distribute(g, n_sites=8, replication_rate=0.3, seed=9)
         dg = to_device_graph(g)
@@ -67,10 +87,21 @@ def test_executors_on_8_devices():
         print("MULTIDEVICE_OK")
         """
     )
-    res = subprocess.run(
-        [sys.executable, "-c", script],
-        capture_output=True, text=True, timeout=1200,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin", "HOME": "/root"},
-        cwd="/root/repo",
+    try:
+        res = subprocess.run(
+            [sys.executable, "-c", script],
+            capture_output=True, text=True, timeout=SUBPROCESS_TIMEOUT_S,
+            env=CHILD_ENV,
+            cwd="/root/repo",
+        )
+    except subprocess.TimeoutExpired as e:
+        out = (e.stdout or b"").decode() if isinstance(e.stdout, bytes) else (e.stdout or "")
+        err = (e.stderr or b"").decode() if isinstance(e.stderr, bytes) else (e.stderr or "")
+        pytest.fail(
+            f"8-device subprocess exceeded {SUBPROCESS_TIMEOUT_S}s\n"
+            f"--- child stdout ---\n{out}\n--- child stderr ---\n{err}"
+        )
+    assert res.returncode == 0 and "MULTIDEVICE_OK" in res.stdout, (
+        f"8-device subprocess failed (rc={res.returncode})\n"
+        f"--- child stdout ---\n{res.stdout}\n--- child stderr ---\n{res.stderr}"
     )
-    assert "MULTIDEVICE_OK" in res.stdout, res.stdout + res.stderr

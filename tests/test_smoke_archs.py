@@ -10,6 +10,7 @@ import jax.numpy as jnp
 from repro.configs import lm_common, registry
 from repro.configs import dlrm_mlperf as dlrm_cfg
 from repro.configs import gnn_common
+from repro.dist import compat
 from repro.dist import sharding as shd
 from repro.models import dlrm, gnn
 from repro.models import transformer as tr
@@ -103,7 +104,7 @@ def test_rpq_smoke():
 
     g = random_labeled_graph(64, 256, 4, seed=5)
     placement = distribute(g, n_sites=4, replication_rate=0.3, seed=5)
-    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     ca = paa.compile_query("l0 l1* l2", g)
     starts = np.arange(0, 64, 9, dtype=np.int32)
     acc = strategies.s2_execute(mesh, placement, ca, starts)

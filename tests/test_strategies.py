@@ -8,9 +8,8 @@ subprocess test (test_multidevice.py) exercises real collectives.
 import numpy as np
 import pytest
 
-import jax
-
 from repro.core import paa, strategies
+from repro.dist import compat
 from repro.core import regex as rx
 from repro.graph.generators import random_labeled_graph
 from repro.graph.partition import distribute, random_overlay
@@ -21,10 +20,7 @@ from repro.graph.structure import example_graph, to_device_graph
 def setup():
     g = example_graph()
     placement = distribute(g, n_sites=4, replication_rate=0.4, seed=1)
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     return g, placement, mesh
 
 
@@ -106,9 +102,7 @@ def test_s2_cost_cap(setup):
 def test_random_graph_cross_check():
     g = random_labeled_graph(40, 160, 4, seed=3)
     placement = distribute(g, n_sites=4, replication_rate=0.3, seed=2)
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     dg = to_device_graph(g)
     ca = paa.compile_query("l0 (l1|l2)* l3", g)
     starts = np.arange(0, 40, 5, dtype=np.int32)

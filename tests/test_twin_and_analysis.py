@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import paa
+from repro.dist import compat
 from repro.graph.generators import TABLE2_QUERIES, alibaba_like
 from repro.launch import analysis
 
@@ -79,6 +80,6 @@ def test_hlo_flops_match_analytic_on_unrolled_program():
     w1 = jax.ShapeDtypeStruct((D, F), jnp.float32)
     w2 = jax.ShapeDtypeStruct((F, D), jnp.float32)
     compiled = jax.jit(f).lower(x, w1, w2).compile()
-    flops = compiled.cost_analysis()["flops"]
+    flops = compat.cost_analysis_dict(compiled)["flops"]
     analytic = 2 * B * D * F * 2  # two matmuls
     assert abs(flops - analytic) / analytic < 0.1
