@@ -1,22 +1,43 @@
-"""Benchmark driver — one module per paper table/figure.
+"""Benchmark driver — one module per paper table/figure, plus the serve
+throughput benchmark.
 
 Prints CSV rows ``name,...`` per artifact; see EXPERIMENTS.md for the
-interpretation and paper-value comparisons.
+interpretation and paper-value comparisons.  The ``serve`` benchmark
+additionally writes ``BENCH_serve.json`` (queries/sec, p50/p95 latency,
+plan-cache hit rate) so the perf trajectory accumulates across PRs.
+
+Run all:     PYTHONPATH=src python -m benchmarks.run
+Run subset:  PYTHONPATH=src python -m benchmarks.run serve fig3
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 import traceback
 
+KNOWN = ["table1", "table2", "fig2", "fig3", "fig4", "scenario6", "roofline", "serve"]
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "names", nargs="*",
+        help=f"benchmarks to run (default: all of {KNOWN})",
+    )
+    args = ap.parse_args()
+    unknown = set(args.names) - set(KNOWN)
+    if unknown:
+        ap.error(f"unknown benchmark(s) {sorted(unknown)}; choose from {KNOWN}")
+    selected = set(args.names) if args.names else set(KNOWN)
+
     from benchmarks import (
         fig2_costs,
         fig3_regions,
         fig4_estimation,
         roofline,
         scenario6,
+        serve_throughput,
         table1_complexity,
         table2_queries,
     )
@@ -29,8 +50,12 @@ def main() -> None:
         ("fig4", fig4_estimation),
         ("scenario6", scenario6),
         ("roofline", roofline),
+        ("serve", serve_throughput),
     ]
+
     for name, mod in modules:
+        if name not in selected:
+            continue
         t0 = time.time()
         print(f"# ==== {name} " + "=" * 50, flush=True)
         try:

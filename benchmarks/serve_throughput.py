@@ -1,0 +1,155 @@
+"""Serving throughput: a repeated Table-2 query mix through
+`repro.serve.QueryService` versus the cold per-query §6 pipeline.
+
+The cold baseline is what the repo could do before the serve layer:
+every request re-runs `planner.plan_query` (model rollouts included) and
+builds a fresh executor.  The warm phase replays the same mix through a
+service whose plan cache has seen each query class once — rollouts are
+skipped, executors are shared per automaton signature, and queued starts
+ride batched `s2_execute` calls.
+
+Writes ``BENCH_serve.json`` (stable schema: queries/sec, p50/p95
+latency, plan-cache hit rate, speedup vs cold).
+
+Run:  PYTHONPATH=src python benchmarks/serve_throughput.py --small
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import paa, planner, strategies
+from repro.core import regex as rx
+from repro.dist import compat
+from repro.graph import generators
+from repro.graph.partition import distribute, random_overlay
+from repro.serve import QueryService, ServeConfig
+
+MIX_QUERIES = ("q1", "q2", "q6", "q11")
+
+
+def _setup(small: bool):
+    if small:
+        g = generators.alibaba_like(n_nodes=8000, n_edges=40000, seed=0)
+    else:
+        g = generators.alibaba_like()
+    net = random_overlay(150, 3.0, seed=1)
+    probe = distribute(g, 150, replication_rate=0.2, seed=1)
+    params = planner.probe_network(net, probe)
+    placement = distribute(g, 4, replication_rate=0.3, seed=2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    return g, params, placement, mesh
+
+
+def _query_mix(g, starts_per_query: int):
+    mix = []
+    for name in MIX_QUERIES:
+        query = generators.TABLE2_QUERIES[name]
+        ca = paa.compile_query(query, g)
+        starts = paa.valid_start_nodes(ca, g)[:starts_per_query]
+        if len(starts):
+            mix.append((name, query, starts))
+    return mix
+
+
+def _cold_pass(g, params, placement, mesh, mix, n_rollouts: int, seed: int):
+    """One-shot §6 pipeline per request: plan (with rollouts) + fresh
+    executor.  This is the pre-serve repo, measured honestly."""
+    t0 = time.perf_counter()
+    n = 0
+    for _, query, starts in mix:
+        plan = planner.plan_query(query, g, params, n_rollouts=n_rollouts, seed=seed)
+        ca = paa.compile_query(query, placement.graph)
+        if plan.choice.strategy == "S1":
+            for s in starts:
+                strategies.s1_execute(mesh, placement, rx.parse(query), ca, int(s))
+        else:
+            strategies.s2_execute(mesh, placement, ca, np.asarray(starts, np.int32))
+        n += 1
+    return n, time.perf_counter() - t0
+
+
+def run(
+    small: bool = True,
+    rounds: int = 3,
+    starts_per_query: int = 4,
+    n_rollouts: int = 150,
+    out: str = "BENCH_serve.json",
+    seed: int = 3,
+) -> list[str]:
+    g, params, placement, mesh = _setup(small)
+    mix = _query_mix(g, starts_per_query)
+
+    # ---- cold baseline: one pass, no reuse anywhere -----------------------
+    n_cold, cold_s = _cold_pass(g, params, placement, mesh, mix, n_rollouts, seed)
+    cold_qps = n_cold / cold_s
+
+    # ---- warm service: warm the caches, then time the replay --------------
+    service = QueryService(
+        placement, mesh, params,
+        config=ServeConfig(n_rollouts=n_rollouts, seed=seed),
+    )
+    for _, query, starts in mix:  # warm-up pass (plans + executors compile)
+        service.enqueue(query, starts)
+    service.flush()
+
+    latencies: list[float] = []
+    t0 = time.perf_counter()
+    n_warm = 0
+    for _ in range(rounds):
+        tickets = [service.enqueue(query, starts) for _, query, starts in mix]
+        service.flush()
+        latencies.extend(t.result().latency_s for t in tickets)
+        n_warm += len(tickets)
+    warm_s = time.perf_counter() - t0
+    warm_qps = n_warm / warm_s
+
+    summary = service.summary()
+    result = {
+        "benchmark": "serve_throughput",
+        "small": small,
+        "n_queries": n_warm,
+        "starts_per_query": starts_per_query,
+        "queries_per_sec": warm_qps,
+        "p50_latency_s": float(np.percentile(latencies, 50)),
+        "p95_latency_s": float(np.percentile(latencies, 95)),
+        "plan_cache_hit_rate": service.plan_cache.hit_rate,
+        "exec_cache_builds": summary["exec_cache"]["builds"],
+        "cold_queries_per_sec": cold_qps,
+        "speedup_vs_cold": warm_qps / cold_qps if cold_qps > 0 else float("inf"),
+        "strategies": summary["strategies"],
+        "n_rollouts": n_rollouts,
+    }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+
+    rows = ["serve,metric,value"]
+    for k in (
+        "queries_per_sec", "cold_queries_per_sec", "speedup_vs_cold",
+        "p50_latency_s", "p95_latency_s", "plan_cache_hit_rate",
+    ):
+        rows.append(f"serve,{k},{result[k]:.4f}")
+    rows.append(f"serve,json,{out}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true", help="40k-edge twin (fast)")
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--rollouts", type=int, default=150)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    print(
+        "\n".join(
+            run(small=args.small, rounds=args.rounds, n_rollouts=args.rollouts, out=args.out)
+        )
+    )
+
+
+if __name__ == "__main__":
+    main()

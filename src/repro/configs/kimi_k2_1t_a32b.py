@@ -3,10 +3,23 @@ MoE 384e top-8 — trillion-param MoE [arXiv:2501.kimi2; unverified].
 
 Trains with Adafactor (factored second moments) and FSDP-sharded expert
 weights (d_ff over the data axes, gathered just-in-time per layer) so the
-~1T parameters fit 256/512 chips (DESIGN.md §6)."""
+~1T parameters fit 256/512 chips (DESIGN.md §6).  The rest-sharding is
+expressed as declarative ``Rules`` overrides (ROADMAP item): the expert
+tensors are (L, E, d_in, d_ff)-shaped, experts shard over ``model`` and
+the d_ff "rest" dim over the data axes; ``pod`` degrades away on
+single-pod meshes via spec fitting."""
+from jax.sharding import PartitionSpec as P
+
 from repro.configs import lm_common
 from repro.configs.registry import ArchSpec, LM_SHAPES, register
 from repro.models import transformer as tr
+
+# pattern → spec pairs consumed by tr.rules_for() / Rules.from_mesh(overrides=...)
+SHARDING_OVERRIDES = (
+    ("params/*/moe/w_gate", P(None, "model", None, ("pod", "data"))),
+    ("params/*/moe/w_up", P(None, "model", None, ("pod", "data"))),
+    ("params/*/moe/w_down", P(None, "model", ("pod", "data"), None)),
+)
 
 
 def full() -> tr.LMConfig:
@@ -15,6 +28,7 @@ def full() -> tr.LMConfig:
         n_kv_heads=8, d_head=112, d_ff=2048, vocab=163840,
         n_experts=384, top_k=8, microbatches=8,
         optimizer="adafactor", fsdp_experts=True,
+        sharding_overrides=SHARDING_OVERRIDES,
     )
 
 

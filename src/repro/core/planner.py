@@ -44,6 +44,25 @@ class QueryPlan:
     p_s2_optimal: float  # fraction of sampled rollouts where Eq. 3 favours S2
     s2_cost_cap: int  # §3.6: interrupt S2 beyond this many expansions
     forecast_symbols: dict[str, float]  # expected network traffic per strategy
+    decision_quantile: float = 0.9
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanEstimates:
+    """The expensive, *reusable* half of a plan: sample-label point
+    estimates plus the raw (Q_bc, D_s2) rollout distribution.
+
+    Everything here depends only on (query, graph statistics) — not on the
+    network parameters, the decision quantile, or the serve layer's online
+    calibration — so ``repro.serve``'s plan cache stores these and re-runs
+    only the cheap :func:`decide_strategy` step per request."""
+
+    query: str
+    q_lbl: float
+    d_s1: float  # un-calibrated §5.2.2 point estimate
+    q_bc_samples: np.ndarray  # raw rollout Q_bc samples
+    d_s2_samples: np.ndarray  # raw rollout D_s2 samples (not yet D_s1-bounded)
+    wildcard: bool
 
 
 def probe_network(net: OverlayNetwork, placement: Placement, seed: int = 0) -> NetworkParams:
@@ -54,23 +73,28 @@ def probe_network(net: OverlayNetwork, placement: Placement, seed: int = 0) -> N
     return NetworkParams(n_peers=n_p, n_connections=n_c, replication_rate=k)
 
 
-def plan_query(
+def fit_model(
+    sample: LabeledGraph, model_kind: str = "bayesian"
+) -> estimation.GilbertModel | estimation.BayesianModel:
+    """Fit the §5.3 statistical graph model once per graph-stats epoch."""
+    if model_kind == "gilbert":
+        return estimation.GilbertModel.fit(sample)
+    return estimation.BayesianModel.fit(sample)
+
+
+def estimate_query(
     query: str,
     sample: LabeledGraph,
-    net_params: NetworkParams,
     total_edges: int | None = None,
+    model: estimation.GilbertModel | estimation.BayesianModel | None = None,
     model_kind: str = "bayesian",
     n_rollouts: int = 2000,
-    quantiles: tuple[float, ...] = (0.5, 0.9),
-    decision_quantile: float = 0.9,
     seed: int = 0,
-) -> QueryPlan:
-    """Produce a strategy decision for ``query`` using only local data.
+) -> PlanEstimates:
+    """§5.2.2 point estimates + §5.3 rollout distribution for ``query``.
 
-    ``sample`` is the planner's local subset of the graph (Alice's own
-    data in §6); ``total_edges`` defaults to scaling the sample by 1
-    (sample == full stats) and should be the |E| estimate from the
-    broadcast count probe when available."""
+    ``model`` accepts a prefit statistical model (from :func:`fit_model`)
+    so a serving loop does not re-fit per request."""
     ast = rx.parse(query)
     ca = paa.compile_query(query, sample)
     total_edges = total_edges if total_edges is not None else sample.n_edges
@@ -78,19 +102,57 @@ def plan_query(
     q_lbl = float(len(rx.labels_of(ast)))
     lmap = sample.label_to_id
     label_ids = {lmap[l] for l in rx.labels_of(ast) if l in lmap}
-    d_s1 = estimation.estimate_d_s1(sample, label_ids, total_edges, rx.has_wildcard(ast))
+    wildcard = rx.has_wildcard(ast)
+    d_s1 = estimation.estimate_d_s1(sample, label_ids, total_edges, wildcard)
 
-    if model_kind == "gilbert":
-        model: estimation.GilbertModel | estimation.BayesianModel = estimation.GilbertModel.fit(sample)
-    else:
-        model = estimation.BayesianModel.fit(sample)
+    if model is None:
+        model = fit_model(sample, model_kind)
     rollouts = estimation.estimate_distribution(ca, model, n_rollouts, seed=seed)
-    q_bc = np.array([r.q_bc for r in rollouts], float)
-    d_s2 = np.minimum(np.array([r.d_s2 for r in rollouts], float), d_s1)  # §6: bounded by D_s1
+    return PlanEstimates(
+        query=query,
+        q_lbl=q_lbl,
+        d_s1=d_s1,
+        q_bc_samples=np.array([r.q_bc for r in rollouts], float),
+        d_s2_samples=np.array([r.d_s2 for r in rollouts], float),
+        wildcard=wildcard,
+    )
 
+
+def calibrated_samples(
+    est: PlanEstimates,
+    d_s1_scale: float = 1.0,
+    q_bc_scale: float = 1.0,
+    d_s2_scale: float = 1.0,
+) -> tuple[float, np.ndarray, np.ndarray]:
+    """Apply calibration factors and the §6 D_s1 bound; returns
+    (d_s1, q_bc, d_s2) with zero-Q_bc rollouts filtered out."""
+    d_s1 = est.d_s1 * d_s1_scale
+    q_bc = est.q_bc_samples * q_bc_scale
+    d_s2 = np.minimum(est.d_s2_samples * d_s2_scale, d_s1)  # §6: bounded by D_s1
     nz = q_bc > 0
-    q_bc_nz = q_bc[nz] if nz.any() else q_bc
-    d_s2_nz = d_s2[nz] if nz.any() else d_s2
+    if nz.any():
+        q_bc, d_s2 = q_bc[nz], d_s2[nz]
+    return d_s1, q_bc, d_s2
+
+
+def decide_strategy(
+    est: PlanEstimates,
+    net_params: NetworkParams,
+    quantiles: tuple[float, ...] = (0.5, 0.9),
+    decision_quantile: float = 0.9,
+    d_s1_scale: float = 1.0,
+    q_bc_scale: float = 1.0,
+    d_s2_scale: float = 1.0,
+) -> QueryPlan:
+    """The cheap half of planning: evaluate the discriminant on (possibly
+    calibrated) estimates and produce the strategy decision.
+
+    The ``*_scale`` factors are the serve layer's cost-feedback
+    recalibration (observed / forecast ratios per label class) — the
+    paper's §5 estimation loop closed online.  Scales of 1.0 reproduce
+    the paper's one-shot §6 workflow exactly."""
+    q_lbl = est.q_lbl
+    d_s1, q_bc_nz, d_s2_nz = calibrated_samples(est, d_s1_scale, q_bc_scale, d_s2_scale)
     qq = {q: float(np.quantile(q_bc_nz, q)) for q in quantiles}
     dq = {q: float(np.quantile(d_s2_nz, q)) for q in quantiles}
 
@@ -114,7 +176,7 @@ def plan_query(
     # cost cap: stop S2 once it has expanded 4× the decision-quantile estimate
     cap = int(4 * max(qq[decision_quantile], 1.0))
     return QueryPlan(
-        query=query,
+        query=est.query,
         choice=choice,
         net=net_params,
         q_lbl=q_lbl,
@@ -124,6 +186,42 @@ def plan_query(
         p_s2_optimal=p_s2,
         s2_cost_cap=cap,
         forecast_symbols=forecast,
+        decision_quantile=decision_quantile,
+    )
+
+
+def plan_query(
+    query: str,
+    sample: LabeledGraph,
+    net_params: NetworkParams,
+    total_edges: int | None = None,
+    model_kind: str = "bayesian",
+    n_rollouts: int = 2000,
+    quantiles: tuple[float, ...] = (0.5, 0.9),
+    decision_quantile: float = 0.9,
+    seed: int = 0,
+    model: estimation.GilbertModel | estimation.BayesianModel | None = None,
+    d_s1_scale: float = 1.0,
+    q_bc_scale: float = 1.0,
+    d_s2_scale: float = 1.0,
+) -> QueryPlan:
+    """Produce a strategy decision for ``query`` using only local data.
+
+    ``sample`` is the planner's local subset of the graph (Alice's own
+    data in §6); ``total_edges`` defaults to scaling the sample by 1
+    (sample == full stats) and should be the |E| estimate from the
+    broadcast count probe when available.
+
+    One-shot convenience wrapper over :func:`estimate_query` +
+    :func:`decide_strategy`; serving paths call those directly so the
+    rollout distribution is computed once per query class."""
+    est = estimate_query(
+        query, sample, total_edges, model=model, model_kind=model_kind,
+        n_rollouts=n_rollouts, seed=seed,
+    )
+    return decide_strategy(
+        est, net_params, quantiles, decision_quantile,
+        d_s1_scale=d_s1_scale, q_bc_scale=q_bc_scale, d_s2_scale=d_s2_scale,
     )
 
 

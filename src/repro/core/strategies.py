@@ -245,25 +245,36 @@ def s1_gather(
     )
 
 
-def s1_execute(
+def query_label_mask(ast: Node, graph: LabeledGraph) -> np.ndarray:
+    """(n_labels,) bool mask of the query's labels; all-True on wildcard
+    (§3.6 — a wildcard defeats S1's label selection)."""
+    mask = np.zeros(graph.n_labels, bool)
+    if has_wildcard(ast):
+        mask[:] = True
+    else:
+        lbl_ids = {graph.label_to_id[l] for l in labels_of(ast) if l in graph.label_to_id}
+        mask[sorted(lbl_ids)] = True
+    return mask
+
+
+def s1_collect(
     mesh: Mesh,
     placement: Placement,
-    ast: Node,
-    ca: CompiledAutomaton,
-    start_node: int,
+    label_mask: np.ndarray,
     cap: int | None = None,
     site_axes: tuple[str, ...] = ("data",),
-) -> tuple[set[int], StrategyCost]:
-    """Full S1: broadcast labels → gather matching edges → dedup → local PAA."""
-    graph = placement.graph
-    lbl_ids = {graph.label_to_id[l] for l in labels_of(ast) if l in graph.label_to_id}
-    label_mask = np.zeros(graph.n_labels, bool)
-    if has_wildcard(ast):
-        label_mask[:] = True
-    else:
-        label_mask[sorted(lbl_ids)] = True
+    device_arrays: dict | None = None,
+) -> LabeledGraph:
+    """S1's retrieval phase: gather every site's ``label_mask``-matching
+    edges and deduplicate the replicated copies at the querying site.
 
-    site_arrays = placement.padded_device_arrays()
+    Exposed separately from :func:`s1_execute` so the serve layer's
+    batcher can retrieve the *union* subgraph of several coalesced S1
+    queries with a single gather; ``device_arrays`` accepts the
+    placement's already-staged padded site arrays (as in
+    :func:`s2_execute`) so serving loops skip the per-call rebuild."""
+    graph = placement.graph
+    site_arrays = device_arrays if device_arrays is not None else placement.padded_device_arrays()
     if cap is None:
         cap = site_arrays["src"].shape[1]
     while True:
@@ -276,7 +287,22 @@ def s1_execute(
     sub = LabeledGraph(
         graph.n_nodes, src.reshape(-1)[v], lbl.reshape(-1)[v], dst.reshape(-1)[v], graph.labels
     )
-    sub = sub.dedup()  # replicated copies collapse at the querying site
+    return sub.dedup()  # replicated copies collapse at the querying site
+
+
+def s1_execute(
+    mesh: Mesh,
+    placement: Placement,
+    ast: Node,
+    ca: CompiledAutomaton,
+    start_node: int,
+    cap: int | None = None,
+    site_axes: tuple[str, ...] = ("data",),
+) -> tuple[set[int], StrategyCost]:
+    """Full S1: broadcast labels → gather matching edges → dedup → local PAA."""
+    graph = placement.graph
+    label_mask = query_label_mask(ast, graph)
+    sub = s1_collect(mesh, placement, label_mask, cap, site_axes)
     dg = paa.device_form(sub)
     acc = np.asarray(paa.answers_single_source(ca, dg, start_node))
     answers = set(np.nonzero(acc)[0].tolist())
@@ -287,6 +313,85 @@ def s1_execute(
 # ---------------------------------------------------------------------------
 # S2 executor — frontier loop over sharded sites, batched queries
 # ---------------------------------------------------------------------------
+
+
+def _fuse_label_runs(ids: list[int]) -> list[tuple[int | None, int | None]]:
+    """Fuse a sorted label-id list into contiguous (lo, hi) ranges; a
+    negative id (wildcard) yields the (None, None) match-everything run."""
+    runs: list[tuple[int | None, int | None]] = []
+    if any(i < 0 for i in ids):
+        runs.append((None, None))
+    ids = sorted(i for i in ids if i >= 0)
+    start = prev = None
+    for i in ids:
+        if start is None:
+            start = prev = i
+        elif i == prev + 1:
+            prev = i
+        else:
+            runs.append((start, prev))
+            start = prev = i
+    if start is not None:
+        runs.append((start, prev))
+    return runs
+
+
+def transition_runs(
+    ca: CompiledAutomaton,
+) -> tuple[tuple[int, int, int, int | None, int | None], ...]:
+    """§Perf iteration 1 (label-range fusion): transitions that share
+    (src_state, dst_state, direction) and carry *contiguous* label ids
+    (the paper's C/A/I/E/P classes are contiguous in the vocabulary)
+    fuse into ONE range predicate — q1 drops from 33 per-level edge
+    scans to 5.
+
+    The run list is also the executor's *structural signature*: two
+    queries with equal runs (plus start/accepting states) compile to the
+    same step function, which is what ``repro.serve``'s executor cache
+    keys on.
+    """
+    from collections import defaultdict
+
+    groups: dict[tuple[int, int, int], list[int]] = defaultdict(list)
+    for t in ca.transitions:
+        groups[(t.src, t.dst, t.direction)].append(t.label_id)
+    runs: list[tuple[int, int, int, int | None, int | None]] = []
+    for (s_st, d_st, direction), ids in sorted(groups.items()):
+        for lo, hi in _fuse_label_runs(ids):
+            runs.append((s_st, d_st, direction, lo, hi))
+    return tuple(runs)
+
+
+def _accounting_runs(
+    ca: CompiledAutomaton,
+) -> tuple[tuple[int, int, int | None, int | None], ...]:
+    """Per-broadcast retrieval runs, deduplicated by (state, direction):
+    the §4.2.2 unicast response for a product state retrieves each distinct
+    (label, dir) symbol once, regardless of how many destination states
+    the matching transitions fan out to."""
+    from collections import defaultdict
+
+    groups: dict[tuple[int, int], set[int]] = defaultdict(set)
+    for t in ca.transitions:
+        groups[(t.src, t.direction)].add(t.label_id)
+    runs: list[tuple[int, int, int | None, int | None]] = []
+    for (s_st, direction), ids in sorted((k, sorted(v)) for k, v in groups.items()):
+        for lo, hi in _fuse_label_runs(list(ids)):
+            runs.append((s_st, direction, lo, hi))
+    return tuple(runs)
+
+
+def broadcast_payload(ca: CompiledAutomaton) -> np.ndarray:
+    """(n_states,) broadcast symbols per popped product state: 1 (node id)
+    + one symbol per distinct (label, dir) out-symbol; 0 for states with
+    no out-transitions (no search is issued, §4.2.2)."""
+    out = np.zeros(ca.n_states, np.float32)
+    syms: dict[int, set] = {}
+    for t in ca.transitions:
+        syms.setdefault(t.src, set()).add((t.label_id, t.direction))
+    for q, s in syms.items():
+        out[q] = 1.0 + len(s)
+    return out
 
 
 def make_s2_step_fn(
@@ -305,41 +410,25 @@ def make_s2_step_fn(
     are OR-combined with ``lax.pmax`` over the site axes — the collective
     realization of 'broadcast search + unicast responses'.
 
-    Returns ``fn(src, lbl, dst, mask, starts) -> answers`` with shapes
-    src/lbl/dst/mask: (n_sites, E_site) int32/bool; starts: (B,) int32;
-    answers: (B, n_nodes) bool.
+    Returns ``fn(src, lbl, dst, mask, starts) -> (answers, q_bc, d_s2,
+    n_bc)`` with shapes src/lbl/dst/mask: (n_sites, E_site) int32/bool;
+    starts: (B,) int32; answers: (B, n_nodes) bool.  The three extra
+    outputs are the *observed* §4.2 message accounting, computed in the
+    loop itself: ``q_bc[i]`` is broadcast symbols (each newly visited
+    product state issues one search — frontier newness is the cache),
+    ``d_s2[i]`` is unicast response symbols summed over every site holding
+    a matching edge (so replicated copies count, i.e. ≈ K·D_s2), and
+    ``n_bc[i]`` is the number of distinct broadcast searches.
     """
     n_states = ca.n_states
     levels = max_levels if max_levels is not None else n_states * n_nodes
 
-    # ---- §Perf iteration 1 (label-range fusion): transitions that share
-    # (src_state, dst_state, direction) and carry *contiguous* label ids
-    # (the paper's C/A/I/E/P classes are contiguous in the vocabulary)
-    # fuse into ONE range predicate — q1 drops from 33 per-level edge
-    # scans to 5.  The per-run edge masks are loop-invariant, so they are
-    # hoisted out of the BFS while_loop (XLA cannot hoist across an
-    # opaque while body on its own).
-    from collections import defaultdict
-
-    groups: dict[tuple[int, int, int], list[int]] = defaultdict(list)
-    for t in ca.transitions:
-        groups[(t.src, t.dst, t.direction)].append(t.label_id)
-    runs: list[tuple[int, int, int, int | None, int | None]] = []
-    for (s_st, d_st, direction), ids in sorted(groups.items()):
-        if any(i < 0 for i in ids):
-            runs.append((s_st, d_st, direction, None, None))  # wildcard
-        ids = sorted(i for i in ids if i >= 0)
-        start = prev = None
-        for i in ids:
-            if start is None:
-                start = prev = i
-            elif i == prev + 1:
-                prev = i
-            else:
-                runs.append((s_st, d_st, direction, start, prev))
-                start = prev = i
-        if start is not None:
-            runs.append((s_st, d_st, direction, start, prev))
+    # per-level edge masks are loop-invariant, so they are hoisted out of
+    # the BFS while_loop (XLA cannot hoist across an opaque while body on
+    # its own)
+    runs = transition_runs(ca)
+    acct_runs = _accounting_runs(ca)
+    b_payload = broadcast_payload(ca)
 
     def local(src, lbl, dst, mask, starts):
         # Any number of sites may live on one device; matching + scatter is
@@ -348,14 +437,14 @@ def make_s2_step_fn(
         src, lbl, dst, mask = (a.reshape(-1) for a in (src, lbl, dst, mask))
 
         # loop-invariant per-run edge predicates (computed once per query)
-        sels = []
-        for (_, _, _, lo, hi) in runs:
+        def range_sel(lo, hi):
             if lo is None:
-                sels.append(mask)
-            else:
-                sels.append(
-                    jnp.logical_and(mask, jnp.logical_and(lbl >= lo, lbl <= hi))
-                )
+                return mask
+            return jnp.logical_and(mask, jnp.logical_and(lbl >= lo, lbl <= hi))
+
+        sels = [range_sel(lo, hi) for (_, _, _, lo, hi) in runs]
+        acct_sels = [range_sel(lo, hi) for (_, _, lo, hi) in acct_runs]
+        b_const = jnp.asarray(b_payload)
 
         def expand(frontier):
             nxt = jnp.zeros_like(frontier)
@@ -376,19 +465,37 @@ def make_s2_step_fn(
             visited0 = jnp.zeros((n_states, n_nodes), jnp.bool_).at[ca.start, s0].set(True)
 
             def cond(state):
-                _, frontier, lev = state
+                _, frontier, lev, _, _, _ = state
                 return jnp.logical_and(frontier.any(), lev < levels)
 
             def body(state):
-                visited, frontier, lev = state
+                visited, frontier, lev, q_bc, d_s2, n_bc = state
+                # observed accounting: the frontier is exactly the set of
+                # newly visited product states, i.e. the broadcast-cache
+                # misses of §4.2.2 (repeat visits never re-enter it)
+                pops = frontier.sum(axis=1)  # (n_states,) states popped now
+                q_bc = q_bc + (pops.astype(jnp.float32) * b_const).sum()
+                n_bc = n_bc + jnp.where(b_const > 0, pops, 0).sum()
+                for (s_st, direction, _, _), asel in zip(acct_runs, acct_sels):
+                    end = src if direction == FWD else dst
+                    hits = jnp.logical_and(frontier[s_st, end], asel)
+                    d_s2 = d_s2 + EDGE_SYMBOLS * hits.sum().astype(jnp.float32)
                 new = jnp.logical_and(expand(frontier), jnp.logical_not(visited))
-                return jnp.logical_or(visited, new), new, lev + 1
+                return jnp.logical_or(visited, new), new, lev + 1, q_bc, d_s2, n_bc
 
-            visited, _, _ = jax.lax.while_loop(cond, body, (visited0, visited0, jnp.int32(0)))
+            visited, _, _, q_bc, d_s2, n_bc = jax.lax.while_loop(
+                cond,
+                body,
+                (visited0, visited0, jnp.int32(0), jnp.float32(0), jnp.float32(0), jnp.int32(0)),
+            )
             acc = jnp.zeros((n_nodes,), jnp.bool_)
             for qf in ca.accepting:
                 acc = jnp.logical_or(acc, visited[qf])
-            return acc
+            # total unicast symbols: every site holding a matching edge
+            # answers the broadcast, so sum the per-site counts
+            for ax in site_axes:
+                d_s2 = jax.lax.psum(d_s2, ax)
+            return acc, q_bc, d_s2, n_bc
 
         return jax.vmap(one_query)(starts)
 
@@ -396,12 +503,18 @@ def make_s2_step_fn(
     spec_b = P(batch_axis) if batch_axis else P()
     # check_vma=False is required: JAX 0.4.x has no replication rule for
     # the BFS while_loop (NotImplementedError under check_rep=True)
+    out_b = P(batch_axis) if batch_axis else P()
     return jax.jit(
         shd.shard_map(
             local,
             mesh=mesh,
             in_specs=(spec_e, spec_e, spec_e, spec_e, spec_b),
-            out_specs=P(batch_axis, None) if batch_axis else P(None, None),
+            out_specs=(
+                P(batch_axis, None) if batch_axis else P(None, None),
+                out_b,
+                out_b,
+                out_b,
+            ),
             check_vma=False,
         )
     )
@@ -415,18 +528,48 @@ def s2_execute(
     site_axes: tuple[str, ...] = ("data",),
     batch_axis: str | None = "model",
     max_levels: int | None = None,
-) -> np.ndarray:
-    """Run the batched S2 executor for ``start_nodes``; (B, V) bool."""
-    arrays = placement.padded_device_arrays()
-    fn = make_s2_step_fn(
-        ca, placement.graph.n_nodes, mesh, site_axes, batch_axis, max_levels
-    )
-    return np.asarray(
-        fn(
-            jnp.asarray(arrays["src"]),
-            jnp.asarray(arrays["lbl"]),
-            jnp.asarray(arrays["dst"]),
-            jnp.asarray(arrays["mask"]),
-            jnp.asarray(np.asarray(start_nodes, np.int32)),
+    step_fn=None,
+    device_arrays: dict | None = None,
+) -> tuple[np.ndarray, list[StrategyCost]]:
+    """Run the batched S2 executor for ``start_nodes``.
+
+    Returns ``(answers, costs)``: answers (B, V) bool, plus one *observed*
+    :class:`StrategyCost` per start node, measured by the executor itself
+    (the feedback signal ``repro.serve`` closes the §5 estimation loop
+    with).  Unicast symbols are converted back to the meters' single-copy
+    convention by dividing the summed per-site responses by the placement's
+    replication factor K (an average — per-query matched-edge replication
+    may deviate slightly).
+
+    ``step_fn`` accepts a prebuilt executor from :func:`make_s2_step_fn`
+    (e.g. from the serve layer's executor cache) so repeated query classes
+    do not re-trace; it must have been built for a compatible
+    (automaton signature, n_nodes, mesh) triple.  ``device_arrays``
+    accepts the placement's (already staged) padded site arrays so a
+    serving loop does not rebuild them per call.
+    """
+    arrays = device_arrays if device_arrays is not None else placement.padded_device_arrays()
+    if step_fn is None:
+        step_fn = make_s2_step_fn(
+            ca, placement.graph.n_nodes, mesh, site_axes, batch_axis, max_levels
         )
+    acc, q_bc, d_s2, n_bc = step_fn(
+        jnp.asarray(arrays["src"]),
+        jnp.asarray(arrays["lbl"]),
+        jnp.asarray(arrays["dst"]),
+        jnp.asarray(arrays["mask"]),
+        jnp.asarray(np.asarray(start_nodes, np.int32)),
     )
+    q_bc, d_s2, n_bc = (np.asarray(a) for a in (q_bc, d_s2, n_bc))
+    k_rep = max(placement.replication_factor, 1e-9)
+    costs = [
+        StrategyCost(
+            strategy="S2",
+            broadcast_symbols=float(q_bc[i]),
+            unicast_symbols=float(d_s2[i]) / k_rep,
+            n_broadcasts=int(n_bc[i]),
+            edges_retrieved=int(round(float(d_s2[i]) / (EDGE_SYMBOLS * k_rep))),
+        )
+        for i in range(len(q_bc))
+    ]
+    return np.asarray(acc), costs

@@ -89,7 +89,7 @@ def lm_cell(arch: str, shape_name: str, mesh: Mesh) -> CellPlan:
     spec = registry.get_arch(arch)
     cfg: tr.LMConfig = spec.full()
     shape = spec.shapes[shape_name]
-    rules = shd.Rules.from_mesh(mesh)
+    rules = tr.rules_for(cfg, mesh)  # arch overrides (e.g. kimi FSDP experts)
     with shd.use_mesh(mesh):
         pshapes = tr.param_shapes(cfg)
         pspecs = tr.param_specs(cfg, rules)

@@ -46,6 +46,10 @@ class LMConfig:
     optimizer: str = "adamw"
     fsdp_experts: bool = False  # rest-shard expert d_ff over data axes (kimi)
     vocab_pad: int = 256  # pad embed/lm_head so the vocab dim shards evenly
+    # per-arch Rules overrides (pattern → PartitionSpec), prepended to the
+    # built-in table by rules_for(); a tuple of pairs so the config stays
+    # hashable.  Takes precedence over the fsdp_experts derived specs.
+    sharding_overrides: tuple[tuple[str, Any], ...] | None = None
 
     @property
     def padded_vocab(self) -> int:
@@ -110,6 +114,14 @@ def init_params(cfg: LMConfig, key) -> dict:
     }
 
 
+def rules_for(cfg: LMConfig, mesh) -> shd.Rules:
+    """Sharding rules for one arch: the mesh-derived table with the
+    config's per-arch overrides prepended (ROADMAP: configs exercise
+    ``Rules.from_mesh(mesh, overrides=...)``)."""
+    overrides = dict(cfg.sharding_overrides) if cfg.sharding_overrides else None
+    return shd.Rules.from_mesh(mesh, overrides=overrides)
+
+
 def param_specs(cfg: LMConfig, rules: shd.Rules) -> dict:
     a = {
         "wq": rules.p_attn_in(),
@@ -122,16 +134,25 @@ def param_specs(cfg: LMConfig, rules: shd.Rules) -> dict:
         a["k_norm"] = P(None, None)
     layers = {"attn": a, "ln1": P(None, None), "ln2": P(None, None)}
     if cfg.is_moe:
-        if cfg.fsdp_experts and rules.batch_axes:
-            e_in = P(None, rules.model_axis, None, rules.batch_axes)
-            e_out = P(None, rules.model_axis, rules.batch_axes, None)
-        else:
-            e_in = e_out = rules.p_moe_experts()
+        # the rule table decides first: an arch override installed via
+        # rules_for() (e.g. kimi's FSDP expert rest-sharding) wins over
+        # both the built-in replicated-d_ff default and the legacy
+        # fsdp_experts-derived specs below
+        table_default = P(None, rules.model_axis, None, None)
+        e_gate = rules.spec("params/layers/moe/w_gate")
+        e_up = rules.spec("params/layers/moe/w_up")
+        e_down = rules.spec("params/layers/moe/w_down")
+        if (e_gate, e_up, e_down) == (table_default,) * 3:
+            if cfg.fsdp_experts and rules.batch_axes:
+                e_gate = e_up = P(None, rules.model_axis, None, rules.batch_axes)
+                e_down = P(None, rules.model_axis, rules.batch_axes, None)
+            else:
+                e_gate = e_up = e_down = rules.p_moe_experts()
         layers["moe"] = {
             "router": rules.p_router(),
-            "w_gate": e_in,
-            "w_up": e_in,
-            "w_down": e_out,
+            "w_gate": e_gate,
+            "w_up": e_up,
+            "w_down": e_down,
         }
     else:
         layers["mlp"] = {

@@ -1,0 +1,40 @@
+"""`repro.serve` — the query-serving layer above `core` + `dist`.
+
+Turns the paper's one-shot §6 planning workflow into a runtime that can
+sustain a request stream: plan caching over normalized query classes,
+signature-batched execution, and online cost-feedback recalibration.
+See README.md in this directory for the architecture.
+"""
+
+from repro.serve.feedback import Calibrator, CalibrationFactors, label_class_key
+from repro.serve.metrics import QueryRecord, ServiceMetrics
+from repro.serve.plancache import (
+    ExecutorCache,
+    PlanCache,
+    automaton_signature,
+    canonical_key,
+)
+from repro.serve.service import (
+    Answers,
+    QueryService,
+    ServeConfig,
+    ServiceOverloaded,
+    Ticket,
+)
+
+__all__ = [
+    "Answers",
+    "Calibrator",
+    "CalibrationFactors",
+    "ExecutorCache",
+    "PlanCache",
+    "QueryRecord",
+    "QueryService",
+    "ServeConfig",
+    "ServiceMetrics",
+    "ServiceOverloaded",
+    "Ticket",
+    "automaton_signature",
+    "canonical_key",
+    "label_class_key",
+]

@@ -1,0 +1,169 @@
+"""Micro-batching of admitted queries.
+
+Two coalescing rules, one per strategy:
+
+* **S2** — queries whose automata share a structural signature are
+  concatenated into one batched ``s2_execute`` call sharded over the mesh
+  ``model`` axis.  Start batches are padded up to a *bucketed* size
+  (powers of two, divisible by the model-axis size) so the number of
+  distinct jit traces per executor is O(log max_batch), not O(distinct
+  request sizes).
+
+* **S1** — queries are greedily grouped while the union of their label
+  masks stays under a budget; each group retrieves its union subgraph
+  with a single ``s1_collect`` gather and every member runs its local PAA
+  on the label-filtered view.  One broadcast+gather round serves the
+  whole group (the per-query *meter* still charges each query its own
+  §4.2.1 cost — coalescing changes wall-clock, not the paper's symbol
+  accounting).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+
+def bucket_size(n: int, multiple: int = 1, max_batch: int = 1024) -> int:
+    """Smallest ``multiple × 2^k`` ≥ n, capped at the largest multiple of
+    ``multiple`` ≤ max(max_batch, multiple).
+
+    ``multiple`` is the model-axis size so padded batches always shard
+    evenly; working in units of ``multiple`` (rather than demanding a
+    power of two outright) keeps this total for odd axis sizes, e.g. a
+    (4, 3) mesh on 12 devices buckets to 3, 6, 12, 24, ...
+    """
+    m = max(multiple, 1)
+    cap = max(max_batch // m, 1) * m
+    units = -(-min(n, cap) // m)  # ceil(min(n, cap) / m)
+    b = 1
+    while b < units:
+        b *= 2
+    return min(b * m, cap)
+
+
+def pad_starts(starts: np.ndarray, size: int) -> np.ndarray:
+    """Pad a start batch to ``size`` by repeating the first entry; padded
+    rows are computed and discarded (answers are per-row)."""
+    starts = np.asarray(starts, np.int32)
+    if len(starts) >= size:
+        return starts[:size]
+    pad = np.full(size - len(starts), starts[0] if len(starts) else 0, np.int32)
+    return np.concatenate([starts, pad])
+
+
+# ---------------------------------------------------------------------------
+# S2 signature batching
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class S2Slice:
+    """One request's slice of a batched execution."""
+
+    item: Any
+    lo: int
+    hi: int
+
+
+def group_by_signature(
+    items: Sequence[Any], signature_fn: Callable[[Any], tuple]
+) -> list[list[Any]]:
+    """Stable-order grouping of requests by automaton signature."""
+    groups: dict[tuple, list[Any]] = {}
+    for it in items:
+        groups.setdefault(signature_fn(it), []).append(it)
+    return list(groups.values())
+
+
+def run_s2_group(
+    group: Sequence[Any],
+    execute: Callable[[np.ndarray, Any], tuple[np.ndarray, list]],
+    max_batch: int = 128,
+    multiple: int = 1,
+) -> dict[int, tuple[np.ndarray, list, int]]:
+    """Run one signature group's concatenated starts through ``execute``.
+
+    ``execute(starts, exemplar_item) -> (answers, costs)`` is called once
+    per bucketed chunk; every item in the group shares an automaton, so
+    the exemplar's compiled executor serves all of them.  Returns
+    ``{id(item): (answer_rows, cost_rows, padded_batch)}``.
+    """
+    slices: list[S2Slice] = []
+    all_starts: list[np.ndarray] = []
+    off = 0
+    for it in group:
+        s = np.asarray(it.starts, np.int32)
+        slices.append(S2Slice(it, off, off + len(s)))
+        all_starts.append(s)
+        off += len(s)
+    starts = np.concatenate(all_starts) if all_starts else np.zeros(0, np.int32)
+
+    acc_chunks: list[np.ndarray] = []
+    cost_chunks: list[list] = []
+    pad_sizes: list[int] = []
+    # chunk by the largest admissible bucket so bucket_size never truncates
+    chunk_cap = bucket_size(max_batch, multiple, max_batch)
+    for lo in range(0, len(starts), chunk_cap):
+        chunk = starts[lo : lo + chunk_cap]
+        size = bucket_size(len(chunk), multiple, max_batch)
+        padded = pad_starts(chunk, size)
+        acc, costs = execute(padded, group[0])
+        acc_chunks.append(np.asarray(acc)[: len(chunk)])
+        cost_chunks.append(costs[: len(chunk)])
+        pad_sizes.append(size)
+
+    acc_all = np.concatenate(acc_chunks) if acc_chunks else np.zeros((0, 0), bool)
+    costs_all = [c for chunk in cost_chunks for c in chunk]
+    batch_of = np.zeros(len(starts), np.int32)
+    pos = 0
+    for size, chunk in zip(pad_sizes, acc_chunks):
+        batch_of[pos : pos + len(chunk)] = size
+        pos += len(chunk)
+
+    out: dict[int, tuple[np.ndarray, list, int]] = {}
+    for sl in slices:
+        batch = int(batch_of[sl.lo]) if sl.hi > sl.lo else 0
+        out[id(sl.item)] = (acc_all[sl.lo : sl.hi], costs_all[sl.lo : sl.hi], batch)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# S1 label-mask coalescing
+# ---------------------------------------------------------------------------
+
+
+def coalesce_s1(items: Sequence[Any], max_union_labels: int) -> list[list[Any]]:
+    """Greedy grouping of S1 requests under a union-label budget.
+
+    ``items`` carry a ``label_mask`` (n_labels,) bool attribute.  A
+    request joins the current group while the union mask stays within
+    ``max_union_labels`` set bits (one oversized wildcard-style query
+    still gets its own group rather than being rejected)."""
+    groups: list[list[Any]] = []
+    union: np.ndarray | None = None
+    cur: list[Any] = []
+    for it in items:
+        mask = np.asarray(it.label_mask, bool)
+        if not cur:
+            cur, union = [it], mask.copy()
+            continue
+        candidate = union | mask
+        if int(candidate.sum()) <= max_union_labels:
+            cur.append(it)
+            union = candidate
+        else:
+            groups.append(cur)
+            cur, union = [it], mask.copy()
+    if cur:
+        groups.append(cur)
+    return groups
+
+
+def union_mask(items: Sequence[Any]) -> np.ndarray:
+    out = np.asarray(items[0].label_mask, bool).copy()
+    for it in items[1:]:
+        out |= np.asarray(it.label_mask, bool)
+    return out

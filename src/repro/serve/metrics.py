@@ -1,0 +1,76 @@
+"""Service-level metrics: per-query latency/symbol counters + summary.
+
+Dumb by design — the service records one :class:`QueryRecord` per request
+and :meth:`ServiceMetrics.summary` reduces them into the stable schema the
+throughput benchmark serializes (queries/sec, p50/p95 latency, cache hit
+rates, per-strategy counts, symbol totals).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryRecord:
+    query: str
+    strategy: str
+    latency_s: float
+    n_starts: int
+    broadcast_symbols: float
+    unicast_symbols: float
+    plan_cache_hit: bool
+    exec_batch_size: int  # padded batch the request rode in (S2), or 1
+
+
+class ServiceMetrics:
+    def __init__(self) -> None:
+        self.records: list[QueryRecord] = []
+        self._t0: float | None = None
+        self._t_last: float | None = None
+
+    def record(self, rec: QueryRecord) -> None:
+        now = time.perf_counter()
+        if self._t0 is None:
+            self._t0 = now - rec.latency_s  # include the first query's service time
+        self._t_last = now
+        self.records.append(rec)
+
+    @property
+    def wall_s(self) -> float:
+        if self._t0 is None or self._t_last is None:
+            return 0.0
+        return max(self._t_last - self._t0, 1e-9)
+
+    def summary(self, extra: dict | None = None) -> dict:
+        lat = np.array([r.latency_s for r in self.records], float)
+        strategies: dict[str, int] = {}
+        for r in self.records:
+            strategies[r.strategy] = strategies.get(r.strategy, 0) + 1
+        n = len(self.records)
+        out = {
+            "n_queries": n,
+            "wall_s": self.wall_s,
+            "queries_per_sec": n / self.wall_s if n else 0.0,
+            "p50_latency_s": float(np.percentile(lat, 50)) if n else 0.0,
+            "p95_latency_s": float(np.percentile(lat, 95)) if n else 0.0,
+            "plan_cache_hit_rate": (
+                sum(r.plan_cache_hit for r in self.records) / n if n else 0.0
+            ),
+            "total_broadcast_symbols": float(sum(r.broadcast_symbols for r in self.records)),
+            "total_unicast_symbols": float(sum(r.unicast_symbols for r in self.records)),
+            "strategies": strategies,
+        }
+        if extra:
+            out.update(extra)
+        return out
+
+    def to_json(self, path: str, extra: dict | None = None) -> dict:
+        s = self.summary(extra)
+        with open(path, "w") as f:
+            json.dump(s, f, indent=2, sort_keys=True)
+        return s

@@ -1,0 +1,275 @@
+"""Plan + executor caches for the serving runtime.
+
+Two caches with different keys, mirroring the two expensive phases of a
+query's life:
+
+* :class:`PlanCache` — LRU over ``(canonical query key, graph-stats
+  epoch)`` → the planner's :class:`~repro.core.planner.PlanEstimates`
+  (plus the compiled automaton and parsed AST).  The canonical key
+  normalizes α-equivalent queries — commutative-operator reordering
+  (``(a|b)`` ≡ ``(b|a)`` ≡ ``{a,b}`` ≡ ``{b|a}``), duplicate union arms,
+  and whitespace — so repeated *query classes* skip the 600–2000 rollout
+  estimation, not just repeated strings.  The stats epoch in the key
+  invalidates every entry implicitly when the service refits its
+  statistical model on fresh sample data.
+
+* :class:`ExecutorCache` — LRU over the *automaton signature* (fused
+  transition runs + start/accepting states + n_nodes + mesh) → the
+  jitted batched S2 step function from
+  :func:`repro.core.strategies.make_s2_step_fn`.  Distinct queries that
+  ground to the same automaton structure share one compiled executor, so
+  each query class jits exactly once (per start-batch bucket).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Callable, Hashable
+
+from jax.sharding import Mesh
+
+from repro.core import regex as rx
+from repro.core import strategies
+from repro.core.automaton import CompiledAutomaton
+
+# ---------------------------------------------------------------------------
+# Query normalization (α-equivalence up to commutative reordering)
+# ---------------------------------------------------------------------------
+
+
+def normalize(node: rx.Node) -> rx.Node:
+    """Canonical form of an RPQ AST.
+
+    Union parts and label-class members are sorted and deduplicated;
+    unions of plain same-direction atoms collapse into a
+    :class:`~repro.core.regex.LabelClass`; singleton classes collapse to
+    a :class:`~repro.core.regex.Label`; nested Concat/Union flatten.
+    Two queries with the same normal form compile to automata with
+    identical answer semantics, so they may share a cached plan.
+    """
+    if isinstance(node, rx.Label):
+        return node
+    if isinstance(node, rx.Wildcard):
+        return node
+    if isinstance(node, rx.LabelClass):
+        names = tuple(sorted(set(node.names)))
+        if len(names) == 1:
+            return rx.Label(names[0], inverse=node.inverse)
+        return rx.LabelClass(names, inverse=node.inverse)
+    if isinstance(node, rx.Concat):
+        parts: list[rx.Node] = []
+        for p in node.parts:
+            q = normalize(p)
+            parts.extend(q.parts if isinstance(q, rx.Concat) else [q])
+        return parts[0] if len(parts) == 1 else rx.Concat(tuple(parts))
+    if isinstance(node, rx.Union):
+        flat: list[rx.Node] = []
+        for p in node.parts:
+            q = normalize(p)
+            flat.extend(q.parts if isinstance(q, rx.Union) else [q])
+        # a union of plain labels/classes with one direction is a class
+        if all(isinstance(p, (rx.Label, rx.LabelClass)) for p in flat) and len(
+            {p.inverse for p in flat}
+        ) == 1:
+            names: set[str] = set()
+            for p in flat:
+                names |= {p.name} if isinstance(p, rx.Label) else set(p.names)
+            return normalize(rx.LabelClass(tuple(sorted(names)), inverse=flat[0].inverse))
+        uniq = {serialize(p): p for p in flat}
+        parts = tuple(uniq[k] for k in sorted(uniq))
+        return parts[0] if len(parts) == 1 else rx.Union(parts)
+    if isinstance(node, rx.Star):
+        return rx.Star(normalize(node.inner))
+    if isinstance(node, rx.Plus):
+        return rx.Plus(normalize(node.inner))
+    if isinstance(node, rx.Optional_):
+        return rx.Optional_(normalize(node.inner))
+    raise TypeError(node)
+
+
+def serialize(node: rx.Node) -> str:
+    """Deterministic string form of an AST (used as the cache key)."""
+    inv = lambda n: "^-1" if getattr(n, "inverse", False) else ""  # noqa: E731
+    if isinstance(node, rx.Label):
+        return f"L[{node.name}]{inv(node)}"
+    if isinstance(node, rx.Wildcard):
+        return f".{inv(node)}"
+    if isinstance(node, rx.LabelClass):
+        return "{" + ",".join(node.names) + "}" + inv(node)
+    if isinstance(node, rx.Concat):
+        return "(" + " ".join(serialize(p) for p in node.parts) + ")"
+    if isinstance(node, rx.Union):
+        return "(" + "|".join(serialize(p) for p in node.parts) + ")"
+    if isinstance(node, rx.Star):
+        return serialize(node.inner) + "*"
+    if isinstance(node, rx.Plus):
+        return serialize(node.inner) + "+"
+    if isinstance(node, rx.Optional_):
+        return serialize(node.inner) + "?"
+    raise TypeError(node)
+
+
+def canonical_key(query: str | rx.Node) -> str:
+    """Normalized cache key for a query string or AST."""
+    ast = rx.parse(query) if isinstance(query, str) else query
+    return serialize(normalize(ast))
+
+
+# ---------------------------------------------------------------------------
+# LRU
+# ---------------------------------------------------------------------------
+
+
+class _LRU:
+    """Tiny LRU dict with hit/miss counters."""
+
+    def __init__(self, maxsize: int):
+        self.maxsize = maxsize
+        self._d: OrderedDict[Hashable, Any] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Hashable) -> Any | None:
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: Hashable, value: Any) -> None:
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {"size": len(self._d), "hits": self.hits, "misses": self.misses,
+                "hit_rate": self.hit_rate}
+
+
+# ---------------------------------------------------------------------------
+# Plan cache
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PlanEntry:
+    """Everything reusable across requests of one (query class, epoch).
+
+    The last three fields are per-service constants of the entry
+    (the service's mesh/config are fixed), precomputed at miss time so
+    warm-cache requests skip the transition-run scan entirely."""
+
+    key: str
+    ast: rx.Node
+    ca: CompiledAutomaton
+    estimates: Any  # planner.PlanEstimates
+    fkey: tuple = ()  # feedback.label_class_key(ast)
+    label_mask: Any = None  # (n_labels,) bool
+    sig: tuple = ()  # automaton_signature for the service's mesh/config
+
+
+class PlanCache:
+    """LRU of :class:`PlanEntry` keyed by (canonical key, stats epoch)."""
+
+    def __init__(self, maxsize: int = 256):
+        self._lru = _LRU(maxsize)
+
+    def get(self, key: str, epoch: int) -> PlanEntry | None:
+        return self._lru.get((key, epoch))
+
+    def put(self, key: str, epoch: int, entry: PlanEntry) -> None:
+        self._lru.put((key, epoch), entry)
+
+    def stats(self) -> dict:
+        return self._lru.stats()
+
+    @property
+    def hit_rate(self) -> float:
+        return self._lru.hit_rate
+
+
+# ---------------------------------------------------------------------------
+# Executor cache
+# ---------------------------------------------------------------------------
+
+
+def automaton_signature(
+    ca: CompiledAutomaton,
+    n_nodes: int,
+    mesh: Mesh,
+    site_axes: tuple[str, ...] = ("data",),
+    batch_axis: str | None = "model",
+    max_levels: int | None = None,
+) -> tuple:
+    """Structural identity of a compiled S2 executor.
+
+    Everything :func:`~repro.core.strategies.make_s2_step_fn` closes over:
+    the fused transition runs, start/accepting states, node count, and the
+    mesh/axis configuration.  Two queries with equal signatures produce
+    byte-identical step functions and therefore share one jit cache.
+    """
+    mesh_key = tuple((n, int(mesh.shape[n])) for n in mesh.axis_names)
+    return (
+        ca.n_states,
+        ca.start,
+        tuple(ca.accepting),
+        strategies.transition_runs(ca),
+        n_nodes,
+        mesh_key,
+        tuple(site_axes),
+        batch_axis,
+        max_levels,
+    )
+
+
+class ExecutorCache:
+    """LRU of jitted S2 step functions keyed by automaton signature."""
+
+    def __init__(self, maxsize: int = 64):
+        self._lru = _LRU(maxsize)
+        self.builds = 0
+
+    def get_or_build(
+        self,
+        ca: CompiledAutomaton,
+        n_nodes: int,
+        mesh: Mesh,
+        site_axes: tuple[str, ...] = ("data",),
+        batch_axis: str | None = "model",
+        max_levels: int | None = None,
+        signature: tuple | None = None,
+    ) -> tuple[tuple, Callable]:
+        """``signature`` accepts the precomputed key (the service computes
+        it once per request during planning) to skip re-deriving the
+        transition runs here."""
+        sig = (
+            signature
+            if signature is not None
+            else automaton_signature(ca, n_nodes, mesh, site_axes, batch_axis, max_levels)
+        )
+        fn = self._lru.get(sig)
+        if fn is None:
+            fn = strategies.make_s2_step_fn(
+                ca, n_nodes, mesh, site_axes, batch_axis, max_levels
+            )
+            self._lru.put(sig, fn)
+            self.builds += 1
+        return sig, fn
+
+    def stats(self) -> dict:
+        return {**self._lru.stats(), "builds": self.builds}
+
+    @property
+    def hit_rate(self) -> float:
+        return self._lru.hit_rate

@@ -1,0 +1,401 @@
+"""`QueryService` — the continuous-batching RPQ serving runtime.
+
+One request's life (all in :meth:`QueryService.flush`):
+
+1. **admit** — :meth:`enqueue` appends to a bounded admission queue
+   (:class:`ServiceOverloaded` when full) and hands back a
+   :class:`Ticket`.
+2. **plan** — the query is normalized (α-equivalent forms share a key)
+   and looked up in the plan cache; on a miss the §5 rollout estimation
+   runs once and is cached for the (query class, stats epoch).  The §6
+   decision itself — discriminant at the decision quantile — is re-run
+   per request with the calibrator's current per-label-class factors, so
+   cached estimates still see fresh feedback.
+3. **batch + execute** — S2 requests sharing an automaton signature ride
+   one batched executor call (the ``model`` mesh axis is the query-batch
+   axis, sites stay on ``data``); S1 requests coalesce under a union
+   label mask into a single gather.
+4. **feed back** — each execution's observed
+   :class:`~repro.core.strategies.StrategyCost` updates the calibrator,
+   and a :class:`~repro.serve.metrics.QueryRecord` lands in the metrics.
+
+:meth:`submit` is the one-call convenience (enqueue + flush); throughput
+callers enqueue a window of requests and flush once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from jax.sharding import Mesh
+import jax.numpy as jnp
+
+from repro.core import paa, planner, strategies
+from repro.core import regex as rx
+from repro.core.cost_model import NetworkParams
+from repro.core.strategies import StrategyCost
+from repro.graph.partition import Placement
+from repro.graph.structure import LabeledGraph
+from repro.serve import batcher, feedback
+from repro.serve import metrics as metrics_mod
+from repro.serve import plancache
+
+
+class ServiceOverloaded(RuntimeError):
+    """Admission queue is full; shed load upstream."""
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    model_kind: str = "bayesian"
+    n_rollouts: int = 600
+    quantiles: tuple[float, ...] = (0.5, 0.9)
+    decision_quantile: float = 0.9
+    total_edges: int | None = None  # |E| from the count probe; None = sample size
+    plan_cache_size: int = 256
+    exec_cache_size: int = 64
+    max_batch: int = 128  # S2 starts per executor call (before bucketing)
+    max_pending: int = 1024  # admission queue bound
+    s1_coalesce_labels: int = 48  # union-label budget per coalesced S1 gather
+    site_axes: tuple[str, ...] = ("data",)
+    batch_axis: str | None = "model"
+    max_levels: int | None = None
+    calibration_decay: float = 0.3
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Answers:
+    """What :meth:`QueryService.submit` resolves to."""
+
+    query: str
+    strategy: str
+    starts: np.ndarray
+    answers: list[set[int]]  # one answer set per start node
+    plan: planner.QueryPlan
+    observed: list[StrategyCost]  # per start (S2) or one per request (S1)
+    latency_s: float
+    plan_cache_hit: bool
+
+
+class Ticket:
+    """Handle for an admitted request; resolved by :meth:`QueryService.flush`."""
+
+    def __init__(self, query: str, starts: np.ndarray):
+        self.query = query
+        self.starts = starts
+        self.done = False
+        self.error: Exception | None = None
+        self._answers: Answers | None = None
+
+    def result(self) -> Answers:
+        if self.error is not None:
+            raise self.error
+        if not self.done or self._answers is None:
+            raise RuntimeError("ticket not resolved yet — call QueryService.flush()")
+        return self._answers
+
+
+@dataclasses.dataclass
+class _Request:
+    query: str
+    ast: rx.Node
+    starts: np.ndarray
+    ticket: Ticket
+    t_enqueue: float
+    strategy_override: str | None = None
+    # filled by the plan phase
+    entry: plancache.PlanEntry | None = None
+    plan: planner.QueryPlan | None = None
+    strategy: str = ""
+    plan_cache_hit: bool = False
+    fkey: tuple = ()
+    label_mask: np.ndarray | None = None
+    sig: tuple = ()  # automaton signature (S2 batching key)
+
+    @property
+    def ca(self):
+        return self.entry.ca
+
+
+class QueryService:
+    """Serve a stream of RPQs over one arbitrarily distributed placement.
+
+    ``sample`` is the planner's local data (Alice's own subset in §6);
+    it defaults to the full placement graph and must share the
+    placement's label vocabulary.  ``strategy`` on submit/enqueue forces
+    S1 or S2, bypassing the planner's decision (useful for tests and
+    A/B measurement); None lets the §6 workflow decide.
+    """
+
+    def __init__(
+        self,
+        placement: Placement,
+        mesh: Mesh,
+        net_params: NetworkParams,
+        sample: LabeledGraph | None = None,
+        config: ServeConfig | None = None,
+    ):
+        self.placement = placement
+        self.mesh = mesh
+        self.net = net_params
+        self.config = config or ServeConfig()
+        self.sample = sample if sample is not None else placement.graph
+        if self.sample.labels != placement.graph.labels:
+            raise ValueError("sample must share the placement's label vocabulary")
+
+        self.stats_epoch = 0
+        self.model = planner.fit_model(self.sample, self.config.model_kind)
+        self.plan_cache = plancache.PlanCache(self.config.plan_cache_size)
+        self.exec_cache = plancache.ExecutorCache(self.config.exec_cache_size)
+        self.calibrator = feedback.Calibrator(decay=self.config.calibration_decay)
+        self.metrics = metrics_mod.ServiceMetrics()
+        self._queue: list[_Request] = []
+        # stage the padded site arrays once; they are static per placement
+        host = placement.padded_device_arrays()
+        self._device_arrays = {k: jnp.asarray(v) for k, v in host.items()}
+
+    # -- stats epoch --------------------------------------------------------
+
+    def refresh_stats(self, sample: LabeledGraph) -> None:
+        """Install fresh sample statistics: refit the model and bump the
+        epoch (which implicitly invalidates every cached plan)."""
+        if sample.labels != self.placement.graph.labels:
+            raise ValueError("sample must share the placement's label vocabulary")
+        self.sample = sample
+        self.model = planner.fit_model(sample, self.config.model_kind)
+        self.stats_epoch += 1
+
+    # -- admission ----------------------------------------------------------
+
+    def enqueue(
+        self,
+        query: str,
+        start_nodes,
+        strategy: str | None = None,
+    ) -> Ticket:
+        if len(self._queue) >= self.config.max_pending:
+            raise ServiceOverloaded(
+                f"admission queue full ({self.config.max_pending} pending)"
+            )
+        if strategy not in (None, "S1", "S2"):
+            raise ValueError(f"strategy must be None, 'S1', or 'S2', got {strategy!r}")
+        ast = rx.parse(query)  # reject malformed queries at admission
+        starts = np.atleast_1d(np.asarray(start_nodes, np.int32))
+        n_nodes = self.placement.graph.n_nodes
+        if starts.size and (starts.min() < 0 or starts.max() >= n_nodes):
+            raise ValueError(
+                f"start nodes must be in [0, {n_nodes}); got range "
+                f"[{starts.min()}, {starts.max()}]"
+            )
+        ticket = Ticket(query, starts)
+        self._queue.append(
+            _Request(
+                query=query,
+                ast=ast,
+                starts=starts,
+                ticket=ticket,
+                t_enqueue=time.perf_counter(),
+                strategy_override=strategy,
+            )
+        )
+        return ticket
+
+    def submit(self, query: str, start_nodes, strategy: str | None = None) -> Answers:
+        """Admit one query and drain the queue; returns its answers.
+
+        Anything else already enqueued is flushed (and batched) with it.
+        """
+        ticket = self.enqueue(query, start_nodes, strategy)
+        self.flush()
+        return ticket.result()
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._queue)
+
+    # -- planning -----------------------------------------------------------
+
+    def _plan(self, req: _Request) -> None:
+        cfg = self.config
+        key = plancache.canonical_key(req.ast)
+        entry = self.plan_cache.get(key, self.stats_epoch)
+        req.plan_cache_hit = entry is not None
+        if entry is None:
+            est = planner.estimate_query(
+                req.query,
+                self.sample,
+                total_edges=cfg.total_edges,
+                model=self.model,
+                n_rollouts=cfg.n_rollouts,
+                seed=cfg.seed,
+            )
+            ca = paa.compile_query(req.query, self.placement.graph)
+            entry = plancache.PlanEntry(
+                key=key, ast=req.ast, ca=ca, estimates=est,
+                fkey=feedback.label_class_key(req.ast),
+                label_mask=strategies.query_label_mask(req.ast, self.placement.graph),
+                sig=plancache.automaton_signature(
+                    ca, self.placement.graph.n_nodes, self.mesh,
+                    cfg.site_axes, cfg.batch_axis, cfg.max_levels,
+                ),
+            )
+            self.plan_cache.put(key, self.stats_epoch, entry)
+        req.entry = entry
+        req.fkey = entry.fkey
+        req.label_mask = entry.label_mask
+        req.sig = entry.sig
+        f = self.calibrator.factors(req.fkey)
+        plan = planner.decide_strategy(
+            entry.estimates,
+            self.net,
+            quantiles=cfg.quantiles,
+            decision_quantile=cfg.decision_quantile,
+            d_s1_scale=f.d_s1,
+            q_bc_scale=f.q_bc,
+            d_s2_scale=f.d_s2,
+        )
+        # a cache hit may come from an α-equivalent string; report the
+        # request's own query, not the first-seen one
+        req.plan = dataclasses.replace(plan, query=req.query)
+        req.strategy = req.strategy_override or req.plan.choice.strategy
+
+    # -- execution ----------------------------------------------------------
+
+    def _run_s2(self, reqs: list[_Request]) -> None:
+        cfg = self.config
+        multiple = 1
+        if cfg.batch_axis and cfg.batch_axis in self.mesh.axis_names:
+            multiple = int(self.mesh.shape[cfg.batch_axis])
+
+        for group in batcher.group_by_signature(reqs, lambda r: r.sig):
+            try:
+                _, step_fn = self.exec_cache.get_or_build(
+                    group[0].ca, self.placement.graph.n_nodes, self.mesh,
+                    cfg.site_axes, cfg.batch_axis, cfg.max_levels,
+                    signature=group[0].sig,
+                )
+
+                def execute(starts, exemplar):
+                    return strategies.s2_execute(
+                        self.mesh, self.placement, exemplar.ca, starts,
+                        cfg.site_axes, cfg.batch_axis, cfg.max_levels,
+                        step_fn=step_fn, device_arrays=self._device_arrays,
+                    )
+
+                results = batcher.run_s2_group(
+                    group, execute, max_batch=cfg.max_batch, multiple=multiple
+                )
+            except Exception as e:  # noqa: BLE001 — fail the group, keep serving
+                for req in group:
+                    self._fail(req, e)
+                continue
+            for req in group:
+                rows, costs, batch = results[id(req)]
+                answers = [set(np.nonzero(rows[i])[0].tolist()) for i in range(len(req.starts))]
+                for c in costs:
+                    self.calibrator.observe(req.fkey, req.entry.estimates, req.plan, c)
+                self._finish(req, answers, costs, exec_batch=batch)
+
+    def _run_s1(self, reqs: list[_Request]) -> None:
+        cfg = self.config
+        graph = self.placement.graph
+        for group in batcher.coalesce_s1(reqs, cfg.s1_coalesce_labels):
+            try:
+                sub = strategies.s1_collect(
+                    self.mesh, self.placement, batcher.union_mask(group),
+                    site_axes=cfg.site_axes, device_arrays=self._device_arrays,
+                )
+            except Exception as e:  # noqa: BLE001
+                for req in group:
+                    self._fail(req, e)
+                continue
+            for req in group:
+                try:
+                    ids = set(np.nonzero(req.label_mask)[0].tolist())
+                    own = sub if len(ids) == graph.n_labels else sub.subgraph_with_labels(ids)
+                    dg = paa.device_form(own)
+                    answers = [
+                        set(np.nonzero(np.asarray(paa.answers_single_source(req.ca, dg, int(s))))[0].tolist())
+                        for s in req.starts
+                    ]
+                except Exception as e:  # noqa: BLE001
+                    self._fail(req, e)
+                    continue
+                cost = strategies.s1_costs(req.entry.ast, graph)
+                self.calibrator.observe(req.fkey, req.entry.estimates, req.plan, cost)
+                self._finish(req, answers, [cost], exec_batch=len(group))
+
+    def _fail(self, req: _Request, err: Exception) -> None:
+        req.ticket.error = err
+        req.ticket.done = True
+
+    def _finish(
+        self,
+        req: _Request,
+        answers: list[set[int]],
+        observed: list[StrategyCost],
+        exec_batch: int,
+    ) -> None:
+        latency = time.perf_counter() - req.t_enqueue
+        req.ticket._answers = Answers(
+            query=req.query,
+            strategy=req.strategy,
+            starts=req.starts,
+            answers=answers,
+            plan=req.plan,
+            observed=observed,
+            latency_s=latency,
+            plan_cache_hit=req.plan_cache_hit,
+        )
+        req.ticket.done = True
+        self.metrics.record(
+            metrics_mod.QueryRecord(
+                query=req.query,
+                strategy=req.strategy,
+                latency_s=latency,
+                n_starts=len(req.starts),
+                broadcast_symbols=float(sum(c.broadcast_symbols for c in observed)),
+                unicast_symbols=float(sum(c.unicast_symbols for c in observed)),
+                plan_cache_hit=req.plan_cache_hit,
+                exec_batch_size=exec_batch,
+            )
+        )
+
+    # -- the drain loop ------------------------------------------------------
+
+    def flush(self) -> list[Ticket]:
+        """Plan, batch, execute, and resolve every pending request.
+
+        One request failing (bad query class, executor error) fails only
+        its own ticket — the rest of the window still resolves."""
+        pending, self._queue = self._queue, []
+        planned: list[_Request] = []
+        for req in pending:
+            try:
+                self._plan(req)
+                planned.append(req)
+            except Exception as e:  # noqa: BLE001
+                self._fail(req, e)
+        s2 = [r for r in planned if r.strategy == "S2"]
+        s1 = [r for r in planned if r.strategy != "S2"]
+        if s2:
+            self._run_s2(s2)
+        if s1:
+            self._run_s1(s1)
+        return [r.ticket for r in pending]
+
+    # -- reporting -----------------------------------------------------------
+
+    def summary(self) -> dict:
+        return self.metrics.summary(
+            extra={
+                "plan_cache": self.plan_cache.stats(),
+                "exec_cache": self.exec_cache.stats(),
+                "calibration": self.calibrator.summary(),
+                "stats_epoch": self.stats_epoch,
+            }
+        )

@@ -1,0 +1,181 @@
+"""Direct tests for the S3/S4 cost meters, the §3.6 interruptible cap,
+and the S2 executor's device-side observed accounting."""
+
+import numpy as np
+import pytest
+
+from repro.core import paa, strategies
+from repro.core import regex as rx
+from repro.core.regex import query_size
+from repro.dist import compat
+from repro.graph.partition import distribute
+from repro.graph.structure import example_graph, to_device_graph
+
+
+@pytest.fixture(scope="module")
+def g():
+    return example_graph()
+
+
+@pytest.fixture(scope="module")
+def index(g):
+    return paa.HostIndex(g)
+
+
+# ---------------------------------------------------------------------------
+# S4 (§3.5.6): exact closed form at the non-localized degenerate bound
+# ---------------------------------------------------------------------------
+
+
+def test_s4_exact_closed_form(g):
+    placement = distribute(g, n_sites=4, replication_rate=0.4, seed=1)
+    for q in ["a* b b", "(a|b)+", "a c (a|b)"]:
+        ast = rx.parse(q)
+        c4 = strategies.s4_costs(ast, g, placement)
+        K = placement.replication_factor
+        # every edge is potentially outgoing: K·|E| copies × 3 symbols + m
+        assert c4.broadcast_symbols == pytest.approx(
+            strategies.EDGE_SYMBOLS * K * g.n_edges + query_size(ast)
+        )
+        # response charged at the label-restricted subgraph (S1's best case)
+        c1 = strategies.s1_costs(ast, g)
+        assert c4.unicast_symbols == c1.unicast_symbols
+        assert c4.edges_retrieved == c1.edges_retrieved
+        assert c4.n_broadcasts == 1 + placement.n_sites
+
+
+def test_s4_grows_with_replication(g):
+    ast = rx.parse("a b")
+    lo = strategies.s4_costs(ast, g, distribute(g, 4, replication_rate=0.3, seed=0))
+    hi = strategies.s4_costs(ast, g, distribute(g, 4, replication_rate=0.9, seed=0))
+    assert hi.broadcast_symbols > lo.broadcast_symbols
+
+
+# ---------------------------------------------------------------------------
+# S3 (§3.5.5): S2 with the cache disabled
+# ---------------------------------------------------------------------------
+
+
+def test_s3_equals_s2_when_nothing_repeats(g, index):
+    """On an acyclic query ('a c (a|b)' visits each product state once per
+    node) the cache never hits, so S3 == S2 on both channels."""
+    ca = paa.compile_query("a c (a|b)", g)
+    for start in range(g.n_nodes):
+        tr = paa.run_instrumented(ca, index, start)
+        if tr.n_cache_hits:
+            continue
+        c2 = strategies.s2_costs(ca, index, start)
+        c3 = strategies.s3_costs(ca, index, start)
+        assert c3.broadcast_symbols == c2.broadcast_symbols
+        assert c3.unicast_symbols == c2.unicast_symbols
+
+
+def test_s3_strictly_pricier_on_cyclic_query(g, index):
+    """'(a|b)+' on the 2-6-9-2 cycle produces cache hits; without the
+    cache S3 must re-pay those broadcasts."""
+    ca = paa.compile_query("(a|b)+", g)
+    strict = 0
+    for start in range(g.n_nodes):
+        tr = paa.run_instrumented(ca, index, start)
+        c2 = strategies.s2_costs(ca, index, start)
+        c3 = strategies.s3_costs(ca, index, start)
+        assert c3.broadcast_symbols >= c2.broadcast_symbols
+        if tr.n_cache_hits:
+            assert c3.broadcast_symbols > c2.broadcast_symbols
+            strict += 1
+        # answers are strategy-independent
+    assert strict > 0  # the cyclic case actually occurred
+
+
+def test_s3_same_answers_as_s2(g, index):
+    ca = paa.compile_query("(a|b)+", g)
+    for start in range(g.n_nodes):
+        t2 = paa.run_instrumented(ca, index, start)
+        t3 = strategies._run_uncached(ca, index, start)
+        assert t2.answers == t3.answers
+
+
+# ---------------------------------------------------------------------------
+# §3.6 interruptible cap (s2_costs(max_pops=...))
+# ---------------------------------------------------------------------------
+
+
+def test_s2_cap_monotone_in_budget(g, index):
+    ca = paa.compile_query("(a|b)+", g)
+    full = strategies.s2_costs(ca, index, 0)
+    prev_bc = prev_uc = -1.0
+    for cap in (1, 2, 4, 8, 16, 64):
+        c = strategies.s2_costs(ca, index, 0, max_pops=cap)
+        assert c.broadcast_symbols >= prev_bc
+        assert c.unicast_symbols >= prev_uc
+        assert c.broadcast_symbols <= full.broadcast_symbols
+        assert c.unicast_symbols <= full.unicast_symbols
+        prev_bc, prev_uc = c.broadcast_symbols, c.unicast_symbols
+    # a big-enough budget reaches the uncapped cost exactly
+    big = strategies.s2_costs(ca, index, 0, max_pops=10_000)
+    assert big.broadcast_symbols == full.broadcast_symbols
+    assert big.unicast_symbols == full.unicast_symbols
+
+
+def test_s2_cap_limits_pops_and_keeps_answers_partial(g, index):
+    ca = paa.compile_query("(a|b)+", g)
+    full = paa.run_instrumented(ca, index, 0)
+    capped = paa.run_instrumented(ca, index, 0, max_pops=2)
+    assert capped.nodes_visited <= 2
+    assert capped.answers <= full.answers  # §3.6: completeness traded away
+    assert len(full.answers) > 0
+
+
+# ---------------------------------------------------------------------------
+# device-observed S2 accounting vs the host meter
+# ---------------------------------------------------------------------------
+
+
+def test_observed_cost_matches_host_meter_on_single_site(g, index):
+    """With one site (K=1) and a query whose per-state symbol sets are
+    pairwise distinct, the executor's observed accounting equals the
+    instrumented host meter symbol-for-symbol."""
+    placement = distribute(g, n_sites=1, replication_rate=1.0, seed=0)
+    assert placement.replication_factor == 1.0
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    ca = paa.compile_query("a c (a|b)", g)  # symbols {a}, {c}, {a,b}: distinct
+    starts = np.arange(g.n_nodes, dtype=np.int32)
+    _, costs = strategies.s2_execute(mesh, placement, ca, starts)
+    for s in starts:
+        host = strategies.s2_costs(ca, index, int(s))
+        assert costs[s].broadcast_symbols == host.broadcast_symbols, int(s)
+        assert costs[s].unicast_symbols == host.unicast_symbols, int(s)
+        assert costs[s].n_broadcasts == host.n_broadcasts, int(s)
+
+
+def test_observed_cost_upper_bounds_host_meter(g, index):
+    """When automaton states share a symbol set the host cache collapses
+    them; the device keys by (state, node) and may only over-count."""
+    placement = distribute(g, n_sites=1, replication_rate=1.0, seed=0)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    for q in ["a* b b", "(a|b)+"]:
+        ca = paa.compile_query(q, g)
+        starts = np.arange(g.n_nodes, dtype=np.int32)
+        _, costs = strategies.s2_execute(mesh, placement, ca, starts)
+        for s in starts:
+            host = strategies.s2_costs(ca, index, int(s))
+            assert costs[s].broadcast_symbols >= host.broadcast_symbols
+            assert costs[s].unicast_symbols >= host.unicast_symbols
+
+
+def test_observed_cost_replication_normalization(g):
+    """Summed per-site responses divided by K land near the single-copy
+    meter: exact when every matched edge is held by exactly K sites."""
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    index = paa.HostIndex(g)
+    placement = distribute(g, n_sites=3, replication_rate=0.5, seed=4)
+    ca = paa.compile_query("a c (a|b)", g)
+    _, costs = strategies.s2_execute(mesh, placement, ca, np.array([0], np.int32))
+    host = strategies.s2_costs(ca, index, 0)
+    # within a factor of max per-edge replication spread
+    k = placement.replication.astype(float)
+    spread = k.max() / max(k.min(), 1.0)
+    assert costs[0].unicast_symbols <= host.unicast_symbols * spread + 1e-6
+    assert costs[0].unicast_symbols * spread >= host.unicast_symbols - 1e-6
+    # broadcast accounting is replication-independent
+    assert costs[0].broadcast_symbols == host.broadcast_symbols

@@ -49,10 +49,12 @@ def test_executors_on_8_devices():
         # S2 executor across real shards
         ca = paa.compile_query("l0 (l1|l2)* l3", g)
         starts = np.arange(0, 48, 6, dtype=np.int32)
-        acc = strategies.s2_execute(mesh, placement, ca, starts)
+        acc, s2costs = strategies.s2_execute(mesh, placement, ca, starts)
+        assert len(s2costs) == len(starts)
         for i, s in enumerate(starts):
             want = np.asarray(paa.answers_single_source(ca, dg, int(s)))
             assert (acc[i] == want).all(), int(s)
+            assert s2costs[i].broadcast_symbols > 0
 
         # S1 executor across real shards
         ast = rx.parse("l0 (l1|l2)* l3")

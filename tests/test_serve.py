@@ -1,0 +1,371 @@
+"""`repro.serve`: service answers vs the centralized PAA oracle, plan/
+executor caching, micro-batching, and cost-feedback recalibration."""
+
+import numpy as np
+import pytest
+
+from repro.core import paa, planner, strategies
+from repro.core import regex as rx
+from repro.core.cost_model import NetworkParams
+from repro.dist import compat
+from repro.graph.generators import random_labeled_graph
+from repro.graph.partition import distribute
+from repro.graph.structure import example_graph, to_device_graph
+from repro.serve import (
+    Calibrator,
+    QueryService,
+    ServeConfig,
+    ServiceOverloaded,
+    automaton_signature,
+    canonical_key,
+    label_class_key,
+)
+from repro.serve import batcher
+
+
+NET = NetworkParams(n_peers=150, n_connections=450, replication_rate=0.2)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = example_graph()
+    placement = distribute(g, n_sites=4, replication_rate=0.4, seed=1)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    return g, placement, mesh
+
+
+@pytest.fixture(scope="module")
+def service(setup):
+    g, placement, mesh = setup
+    return QueryService(
+        placement, mesh, NET, config=ServeConfig(n_rollouts=100, seed=0)
+    )
+
+
+# ---------------------------------------------------------------------------
+# acceptance: a mixed S1/S2 stream matches the centralized oracle
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_stream_matches_oracle(setup, service):
+    g, placement, mesh = setup
+    dg = to_device_graph(g)
+    queries = ["a* b b", "a c (a|b)", "(a|b)+", "a* b^-1", ". ."]
+    tickets = []
+    for q in queries:
+        starts = np.arange(g.n_nodes, dtype=np.int32)
+        # planner-decided, plus both forced strategies → a guaranteed mix
+        tickets.append((q, service.enqueue(q, starts)))
+        tickets.append((q, service.enqueue(q, starts, strategy="S1")))
+        tickets.append((q, service.enqueue(q, starts, strategy="S2")))
+    service.flush()
+
+    strategies_seen = set()
+    for q, t in tickets:
+        ans = t.result()
+        strategies_seen.add(ans.strategy)
+        ca = paa.compile_query(q, g)
+        for i, s in enumerate(ans.starts):
+            oracle = set(
+                np.nonzero(np.asarray(paa.answers_single_source(ca, dg, int(s))))[0].tolist()
+            )
+            assert ans.answers[i] == oracle, (q, ans.strategy, int(s))
+    assert strategies_seen == {"S1", "S2"}
+
+
+def test_submit_returns_answers(setup, service):
+    g, _, _ = setup
+    dg = to_device_graph(g)
+    ans = service.submit("a c (a|b)", [0, 1])
+    ca = paa.compile_query("a c (a|b)", g)
+    for i, s in enumerate(ans.starts):
+        oracle = set(
+            np.nonzero(np.asarray(paa.answers_single_source(ca, dg, int(s))))[0].tolist()
+        )
+        assert ans.answers[i] == oracle
+    assert ans.latency_s > 0
+    assert len(ans.observed) >= 1
+
+
+# ---------------------------------------------------------------------------
+# plan cache: α-equivalence + epoch invalidation
+# ---------------------------------------------------------------------------
+
+
+def test_canonical_key_alpha_equivalence():
+    k = canonical_key
+    assert k("(a|b)+") == k("(b|a)+") == k("{a,b}+") == k("{b|a}+")
+    assert k("a  b") == k("a b")
+    assert k("(a|a|b)") == k("{a,b}")
+    assert k("{a}") == k("a")
+    assert k("(a|b) c") != k("(a|b) d")
+    assert k("a^-1") != k("a")
+    assert k("a*") != k("a+")
+
+
+def test_plan_cache_hits_for_equivalent_queries(setup):
+    g, placement, mesh = setup
+    svc = QueryService(placement, mesh, NET, config=ServeConfig(n_rollouts=50))
+    a1 = svc.submit("(a|b)+", [0])
+    assert not a1.plan_cache_hit
+    a2 = svc.submit("(b|a)+", [0])  # α-equivalent: same plan entry
+    assert a2.plan_cache_hit
+    assert a1.answers == a2.answers
+    assert a2.plan.query == "(b|a)+"  # the request's own string, not first-seen
+    a3 = svc.submit("(a|b)+", [0])
+    assert a3.plan_cache_hit
+
+
+def test_refresh_stats_invalidates_plans(setup):
+    g, placement, mesh = setup
+    svc = QueryService(placement, mesh, NET, config=ServeConfig(n_rollouts=50))
+    assert not svc.submit("a b", [0]).plan_cache_hit
+    assert svc.submit("a b", [0]).plan_cache_hit
+    svc.refresh_stats(g)
+    assert svc.stats_epoch == 1
+    assert not svc.submit("a b", [0]).plan_cache_hit  # new epoch, new entry
+
+
+# ---------------------------------------------------------------------------
+# executor cache + batching
+# ---------------------------------------------------------------------------
+
+
+def test_executor_cache_shared_across_requests(setup):
+    g, placement, mesh = setup
+    svc = QueryService(placement, mesh, NET, config=ServeConfig(n_rollouts=50))
+    svc.submit("a* b b", [0, 1], strategy="S2")
+    builds = svc.exec_cache.builds
+    svc.submit("a* b b", [2, 3], strategy="S2")  # same signature: no rebuild
+    assert svc.exec_cache.builds == builds
+    svc.submit("a* b^-1", [0], strategy="S2")  # different automaton: builds
+    assert svc.exec_cache.builds == builds + 1
+
+
+def test_automaton_signature_discriminates(setup):
+    g, _, mesh = setup
+    ca1 = paa.compile_query("a b", g)
+    ca2 = paa.compile_query("a b", g)
+    ca3 = paa.compile_query("a c", g)
+    sig = lambda ca: automaton_signature(ca, g.n_nodes, mesh)  # noqa: E731
+    assert sig(ca1) == sig(ca2)
+    assert sig(ca1) != sig(ca3)
+
+
+def test_bucket_sizes():
+    assert batcher.bucket_size(1) == 1
+    assert batcher.bucket_size(3) == 4
+    assert batcher.bucket_size(8) == 8
+    assert batcher.bucket_size(9) == 16
+    assert batcher.bucket_size(3, multiple=4) == 4
+    assert batcher.bucket_size(5, multiple=2) == 8
+    assert batcher.bucket_size(4000, max_batch=128) == 128
+    # non-power-of-two model axes (e.g. a (4, 3) mesh) must terminate
+    assert batcher.bucket_size(5, multiple=3) == 6
+    assert batcher.bucket_size(7, multiple=3) == 12
+    assert batcher.bucket_size(1, multiple=3) == 3
+    # the cap stays divisible by the multiple
+    assert batcher.bucket_size(200, multiple=3, max_batch=128) == 126
+
+
+def test_pad_starts():
+    out = batcher.pad_starts(np.array([7, 8], np.int32), 4)
+    assert out.tolist() == [7, 8, 7, 7]
+
+
+def test_s2_batched_queries_share_one_call(setup):
+    """Two same-signature requests ride one padded batch and both get
+    per-start observed costs back."""
+    g, placement, mesh = setup
+    svc = QueryService(placement, mesh, NET, config=ServeConfig(n_rollouts=50))
+    t1 = svc.enqueue("(a|b)+", [0, 1, 2], strategy="S2")
+    t2 = svc.enqueue("(b|a)+", [3, 4], strategy="S2")
+    svc.flush()
+    a1, a2 = t1.result(), t2.result()
+    # 3 + 2 starts pad to one bucket of 8
+    assert a1.observed and a2.observed
+    assert len(a1.observed) == 3 and len(a2.observed) == 2
+    rec = svc.metrics.records[-1]
+    assert rec.exec_batch_size == 8
+
+
+def test_s1_coalescing_groups_by_label_budget():
+    class Item:
+        def __init__(self, mask):
+            self.label_mask = np.array(mask, bool)
+
+    a = Item([1, 0, 0, 0])
+    b = Item([0, 1, 0, 0])
+    c = Item([0, 0, 1, 1])
+    groups = batcher.coalesce_s1([a, b, c], max_union_labels=2)
+    assert [len(grp) for grp in groups] == [2, 1]
+    assert batcher.union_mask(groups[0]).tolist() == [True, True, False, False]
+    # budget of 1: nobody coalesces, oversized items still run
+    groups = batcher.coalesce_s1([a, b, c], max_union_labels=1)
+    assert [len(grp) for grp in groups] == [1, 1, 1]
+
+
+# ---------------------------------------------------------------------------
+# admission queue
+# ---------------------------------------------------------------------------
+
+
+def test_admission_queue_bound(setup):
+    g, placement, mesh = setup
+    svc = QueryService(
+        placement, mesh, NET, config=ServeConfig(n_rollouts=50, max_pending=2)
+    )
+    svc.enqueue("a b", [0])
+    svc.enqueue("a b", [1])
+    with pytest.raises(ServiceOverloaded):
+        svc.enqueue("a b", [2])
+    svc.flush()
+    svc.enqueue("a b", [2])  # drained: admits again
+    svc.flush()
+
+
+def test_malformed_requests_rejected_at_admission(setup):
+    g, placement, mesh = setup
+    svc = QueryService(placement, mesh, NET, config=ServeConfig(n_rollouts=50))
+    good = svc.enqueue("a b", [0])
+    with pytest.raises(ValueError):
+        svc.enqueue("a (b", [0])  # unbalanced paren: rejected immediately
+    with pytest.raises(ValueError):
+        svc.enqueue("a b", [g.n_nodes + 7])  # out-of-range start node
+    with pytest.raises(ValueError):
+        svc.enqueue("a b", [-1])
+    with pytest.raises(ValueError):
+        svc.enqueue("a b", [0], strategy="s2")  # typo'd override must not run S1
+    assert svc.n_pending == 1  # none of the bad requests entered the queue
+    svc.flush()
+    assert good.result().answers is not None
+
+
+def test_one_failed_request_does_not_drop_the_window(setup):
+    """A request that fails mid-plan resolves its own ticket with the
+    error; everything else in the window still completes."""
+    g, placement, mesh = setup
+    svc = QueryService(placement, mesh, NET, config=ServeConfig(n_rollouts=50))
+    good = svc.enqueue("a b", [0])
+    bad = svc.enqueue("a b", [0])
+    svc._queue[1].ast = object()  # sabotage planning for one request
+    svc.flush()
+    assert good.result().answers is not None
+    with pytest.raises(TypeError):
+        bad.result()
+
+
+def test_unresolved_ticket_raises(setup):
+    g, placement, mesh = setup
+    svc = QueryService(placement, mesh, NET, config=ServeConfig(n_rollouts=50))
+    t = svc.enqueue("a b", [0])
+    with pytest.raises(RuntimeError):
+        t.result()
+    svc.flush()
+    t.result()
+
+
+# ---------------------------------------------------------------------------
+# feedback recalibration
+# ---------------------------------------------------------------------------
+
+
+def test_calibrator_converges_to_observed_ratio():
+    cal = Calibrator(decay=0.5)
+    key = (("a", "b"), False)
+    est = planner.PlanEstimates(
+        query="a b", q_lbl=2.0, d_s1=100.0,
+        q_bc_samples=np.full(32, 10.0), d_s2_samples=np.full(32, 50.0),
+        wildcard=False,
+    )
+    plan = planner.decide_strategy(est, NET)
+    obs = strategies.StrategyCost("S1", 2.0, 200.0)  # observed 2× the estimate
+    for _ in range(12):
+        cal.observe(key, est, plan, obs)
+    f = cal.factors(key)
+    assert abs(f.d_s1 - 2.0) < 0.01
+    assert f.q_bc == 1.0  # S1 observations never touch the S2 channels
+
+
+def test_calibration_scales_planner_estimates():
+    est = planner.PlanEstimates(
+        query="a b", q_lbl=2.0, d_s1=100.0,
+        q_bc_samples=np.full(32, 10.0), d_s2_samples=np.full(32, 50.0),
+        wildcard=False,
+    )
+    base = planner.decide_strategy(est, NET)
+    scaled = planner.decide_strategy(est, NET, d_s1_scale=2.0, q_bc_scale=3.0)
+    assert scaled.d_s1_est == pytest.approx(2 * base.d_s1_est)
+    assert scaled.q_bc_quantiles[0.9] == pytest.approx(3 * base.q_bc_quantiles[0.9])
+
+
+def test_calibrator_clamps_pathological_ratios():
+    cal = Calibrator(decay=1.0, clamp=(0.2, 5.0))
+    key = (("a",), False)
+    est = planner.PlanEstimates(
+        query="a", q_lbl=1.0, d_s1=1.0,
+        q_bc_samples=np.full(8, 1.0), d_s2_samples=np.full(8, 1.0),
+        wildcard=False,
+    )
+    plan = planner.decide_strategy(est, NET)
+    cal.observe(key, est, plan, strategies.StrategyCost("S1", 1.0, 1e9))
+    assert cal.factors(key).d_s1 == 5.0
+
+
+def test_service_feedback_loop_runs(setup, service):
+    """After serving, the calibrator holds factors for the seen classes
+    and they reflect observed/forecast (finite, clamped, not all 1)."""
+    s = service.calibrator.summary()
+    assert s["n_observations"] > 0
+    assert s["n_label_classes"] >= 1
+    for factors in s["factors"].values():
+        for v in factors.values():
+            assert 0.2 <= v <= 5.0
+
+
+def test_feedback_key():
+    assert label_class_key(rx.parse("(a|b)+")) == (("a", "b"), False)
+    assert label_class_key(rx.parse("a .")) == (("a",), True)
+
+
+# ---------------------------------------------------------------------------
+# metrics + larger randomized stream
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_summary_schema(setup, service):
+    s = service.summary()
+    for k in (
+        "n_queries", "queries_per_sec", "p50_latency_s", "p95_latency_s",
+        "plan_cache_hit_rate", "total_broadcast_symbols",
+        "total_unicast_symbols", "strategies", "plan_cache", "exec_cache",
+        "calibration", "stats_epoch",
+    ):
+        assert k in s, k
+    assert s["n_queries"] == len(service.metrics.records)
+    assert set(s["strategies"]) <= {"S1", "S2"}
+
+
+def test_randomized_stream_oracle():
+    g = random_labeled_graph(40, 160, 4, seed=3)
+    placement = distribute(g, n_sites=4, replication_rate=0.3, seed=2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    svc = QueryService(placement, mesh, NET, config=ServeConfig(n_rollouts=60))
+    dg = to_device_graph(g)
+    rng = np.random.default_rng(0)
+    queries = ["l0 (l1|l2)* l3", "l0 l1", "(l2|l3)+", "l1* l0^-1"]
+    tickets = []
+    for _ in range(3):  # repeated rounds exercise warm plan + executor caches
+        for q in queries:
+            starts = rng.integers(0, g.n_nodes, size=rng.integers(1, 5))
+            tickets.append((q, svc.enqueue(q, starts)))
+        svc.flush()
+    for q, t in tickets:
+        ans = t.result()
+        ca = paa.compile_query(q, g)
+        for i, s in enumerate(ans.starts):
+            oracle = set(
+                np.nonzero(np.asarray(paa.answers_single_source(ca, dg, int(s))))[0].tolist()
+            )
+            assert ans.answers[i] == oracle, (q, ans.strategy, int(s))
+    assert svc.plan_cache.hit_rate > 0.5

@@ -107,7 +107,7 @@ def test_rpq_smoke():
     mesh = compat.make_mesh((1, 1), ("data", "model"))
     ca = paa.compile_query("l0 l1* l2", g)
     starts = np.arange(0, 64, 9, dtype=np.int32)
-    acc = strategies.s2_execute(mesh, placement, ca, starts)
+    acc, _ = strategies.s2_execute(mesh, placement, ca, starts)
     dg = to_device_graph(g)
     for i, s in enumerate(starts):
         want = np.asarray(paa.answers_single_source(ca, dg, int(s)))
@@ -123,3 +123,36 @@ def test_registry_covers_all_archs():
         len(registry.get_arch(a).shapes) for a in archs if a != "alibaba-rpq"
     )
     assert n_cells == 40
+
+
+def test_kimi_rules_overrides_flow_through_config():
+    """ROADMAP item: kimi's FSDP expert rest-sharding is expressed as
+    Rules.from_mesh(mesh, overrides=...) via the config, and wins over
+    both the built-in table and the legacy fsdp_experts-derived specs."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import kimi_k2_1t_a32b as kimi
+
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    cfg = kimi.full()
+    assert cfg.sharding_overrides == kimi.SHARDING_OVERRIDES
+
+    rules = tr.rules_for(cfg, mesh)
+    # the override resolves through the table (pattern match on any layer)
+    assert rules.spec("params/layers/moe/w_gate") == P(None, "model", None, ("pod", "data"))
+    specs = tr.param_specs(cfg, rules)
+    moe = specs["layers"]["moe"]
+    assert moe["w_gate"] == P(None, "model", None, ("pod", "data"))
+    assert moe["w_down"] == P(None, "model", ("pod", "data"), None)
+    # spec fitting degrades the absent pod axis on a 2-axis mesh
+    fitted = rules.fit(moe["w_gate"], (cfg.n_layers, cfg.n_experts, cfg.d_model, cfg.d_ff))
+    assert fitted == P(None, "model", None, "data")
+
+    # without overrides the legacy fsdp_experts path still rest-shards
+    legacy = tr.param_specs(cfg, shd.Rules.from_mesh(mesh))
+    assert legacy["layers"]["moe"]["w_gate"] == P(None, "model", None, ("data",))
+    # a moe config with neither overrides nor fsdp keeps the built-in spec
+    plain = lm_common.lm_smoke("granite-moe-1b-a400m", moe=True)
+    assert tr.param_specs(plain, shd.Rules.from_mesh(mesh))["layers"]["moe"][
+        "w_gate"
+    ] == P(None, "model", None, None)

@@ -65,10 +65,12 @@ def test_s2_executor_matches_oracle(setup):
     starts = np.arange(g.n_nodes, dtype=np.int32)
     for q in QUERIES:
         ca = paa.compile_query(q, g)
-        acc = strategies.s2_execute(mesh, placement, ca, starts, batch_axis="model")
+        acc, costs = strategies.s2_execute(mesh, placement, ca, starts, batch_axis="model")
+        assert len(costs) == len(starts)
         for s in starts:
             oracle = np.asarray(paa.answers_single_source(ca, dg, int(s)))
             assert (acc[s] == oracle).all(), (q, s)
+            assert costs[s].strategy == "S2" and costs[s].broadcast_symbols >= 0
 
 
 def test_meters_monotonicity(setup):
@@ -106,7 +108,7 @@ def test_random_graph_cross_check():
     dg = to_device_graph(g)
     ca = paa.compile_query("l0 (l1|l2)* l3", g)
     starts = np.arange(0, 40, 5, dtype=np.int32)
-    acc = strategies.s2_execute(mesh, placement, ca, starts)
+    acc, _ = strategies.s2_execute(mesh, placement, ca, starts)
     for i, s in enumerate(starts):
         oracle = np.asarray(paa.answers_single_source(ca, dg, int(s)))
         assert (acc[i] == oracle).all()
