@@ -16,7 +16,10 @@ import argparse
 import time
 import traceback
 
-KNOWN = ["table1", "table2", "fig2", "fig3", "fig4", "scenario6", "roofline", "serve"]
+KNOWN = [
+    "table1", "table2", "fig2", "fig3", "fig4", "scenario6", "roofline",
+    "serve", "frontier",
+]
 
 
 def main() -> None:
@@ -35,6 +38,7 @@ def main() -> None:
         fig2_costs,
         fig3_regions,
         fig4_estimation,
+        frontier_level,
         roofline,
         scenario6,
         serve_throughput,
@@ -51,6 +55,7 @@ def main() -> None:
         ("scenario6", scenario6),
         ("roofline", roofline),
         ("serve", serve_throughput),
+        ("frontier", frontier_level),
     ]
 
     for name, mod in modules:

@@ -362,36 +362,28 @@ def transition_runs(
     return tuple(runs)
 
 
-def _accounting_runs(
+def symbol_set_groups(
     ca: CompiledAutomaton,
-) -> tuple[tuple[int, int, int | None, int | None], ...]:
-    """Per-broadcast retrieval runs, deduplicated by (state, direction):
-    the §4.2.2 unicast response for a product state retrieves each distinct
-    (label, dir) symbol once, regardless of how many destination states
-    the matching transitions fan out to."""
-    from collections import defaultdict
+) -> tuple[tuple[tuple[tuple[int, int], ...], tuple[int, ...]], ...]:
+    """Automaton states grouped by their out-symbol set, as
+    ``((symset, states), ...)`` with ``symset`` the sorted distinct
+    (label_id, direction) pairs.  States with no out-transitions issue no
+    broadcast (§4.2.2) and are omitted.
 
-    groups: dict[tuple[int, int], set[int]] = defaultdict(set)
-    for t in ca.transitions:
-        groups[(t.src, t.direction)].add(t.label_id)
-    runs: list[tuple[int, int, int | None, int | None]] = []
-    for (s_st, direction), ids in sorted((k, sorted(v)) for k, v in groups.items()):
-        for lo, hi in _fuse_label_runs(list(ids)):
-            runs.append((s_st, direction, lo, hi))
-    return tuple(runs)
-
-
-def broadcast_payload(ca: CompiledAutomaton) -> np.ndarray:
-    """(n_states,) broadcast symbols per popped product state: 1 (node id)
-    + one symbol per distinct (label, dir) out-symbol; 0 for states with
-    no out-transitions (no search is issued, §4.2.2)."""
-    out = np.zeros(ca.n_states, np.float32)
+    This is the §4.2.2 broadcast-cache key structure: the host meter
+    caches by (node, symbol-set), so two *distinct* states sharing a
+    symbol set must share one broadcast per node — the device meters key
+    their dedup bitmaps by these groups to agree with the host
+    (ROADMAP "Observed-cost fidelity")."""
     syms: dict[int, set] = {}
     for t in ca.transitions:
         syms.setdefault(t.src, set()).add((t.label_id, t.direction))
+    groups: dict[tuple, list[int]] = {}
     for q, s in syms.items():
-        out[q] = 1.0 + len(s)
-    return out
+        groups.setdefault(tuple(sorted(s)), []).append(q)
+    return tuple(
+        sorted((symset, tuple(sorted(states))) for symset, states in groups.items())
+    )
 
 
 def make_s2_step_fn(
@@ -401,25 +393,51 @@ def make_s2_step_fn(
     site_axes: tuple[str, ...] = ("data",),
     batch_axis: str | None = "model",
     max_levels: int | None = None,
+    backend: str = "reference",
+    graph: LabeledGraph | None = None,
+    replication_factor: float = 1.0,
+    block_size: int = 128,
+    interpret: bool | None = None,
 ):
     """Build the jitted batched S2 executor.
 
-    Sites (edge shards) live on ``site_axes``; the query batch is sharded
-    over ``batch_axis``.  Each BFS level: every site matches *its* local
-    edges against the (replicated) frontier and the per-site contributions
-    are OR-combined with ``lax.pmax`` over the site axes — the collective
-    realization of 'broadcast search + unicast responses'.
+    Two backends share one call contract:
+
+    * ``"reference"`` (default) — sites (edge shards) live on
+      ``site_axes``; the query batch is sharded over ``batch_axis``.
+      Each BFS level: every site matches *its* local edges against the
+      (replicated) frontier and the per-site contributions are
+      OR-combined with ``lax.pmax`` over the site axes — the collective
+      realization of 'broadcast search + unicast responses'.
+
+    * ``"frontier_kernel"`` — the fused Pallas level kernel: the whole
+      BFS level over all transitions is ONE ``pallas_call`` on the
+      block-sparse tiles of ``graph`` (required), with up to 8 queries
+      stacked into the f32 row-tile minimum and a device-resident
+      fixpoint (see :mod:`repro.kernels.frontier`).  ``interpret=None``
+      auto-selects interpret mode off-TPU; ``replication_factor`` scales
+      the returned unicast symbols to the reference backend's
+      summed-per-site convention so :func:`s2_execute` can divide it
+      back out.
 
     Returns ``fn(src, lbl, dst, mask, starts) -> (answers, q_bc, d_s2,
     n_bc)`` with shapes src/lbl/dst/mask: (n_sites, E_site) int32/bool;
     starts: (B,) int32; answers: (B, n_nodes) bool.  The three extra
     outputs are the *observed* §4.2 message accounting, computed in the
-    loop itself: ``q_bc[i]`` is broadcast symbols (each newly visited
-    product state issues one search — frontier newness is the cache),
-    ``d_s2[i]`` is unicast response symbols summed over every site holding
-    a matching edge (so replicated copies count, i.e. ≈ K·D_s2), and
-    ``n_bc[i]`` is the number of distinct broadcast searches.
+    loop itself: ``q_bc[i]`` is broadcast symbols, ``d_s2[i]`` is unicast
+    response symbols summed over every site holding a matching edge (so
+    replicated copies count, i.e. ≈ K·D_s2), and ``n_bc[i]`` is the
+    number of distinct broadcast searches.  Both meters deduplicate
+    broadcasts by (symbol-set, node) — the §4.2.2 cache key — so they
+    agree with the host meter even when distinct states share a symbol
+    set.
     """
+    if backend == "frontier_kernel":
+        return _make_frontier_step_fn(
+            ca, n_nodes, max_levels, graph, replication_factor, block_size, interpret
+        )
+    if backend != "reference":
+        raise ValueError(f"backend must be 'reference' or 'frontier_kernel', got {backend!r}")
     n_states = ca.n_states
     levels = max_levels if max_levels is not None else n_states * n_nodes
 
@@ -427,8 +445,8 @@ def make_s2_step_fn(
     # the BFS while_loop (XLA cannot hoist across an opaque while body on
     # its own)
     runs = transition_runs(ca)
-    acct_runs = _accounting_runs(ca)
-    b_payload = broadcast_payload(ca)
+    sgroups = symbol_set_groups(ca)
+    n_groups = max(len(sgroups), 1)
 
     def local(src, lbl, dst, mask, starts):
         # Any number of sites may live on one device; matching + scatter is
@@ -443,8 +461,17 @@ def make_s2_step_fn(
             return jnp.logical_and(mask, jnp.logical_and(lbl >= lo, lbl <= hi))
 
         sels = [range_sel(lo, hi) for (_, _, _, lo, hi) in runs]
-        acct_sels = [range_sel(lo, hi) for (_, _, lo, hi) in acct_runs]
-        b_const = jnp.asarray(b_payload)
+        # per symbol-set group: fused label-range predicates by direction
+        group_sels = []
+        for symset, _ in sgroups:
+            by_dir: dict[int, list[int]] = {}
+            for lid, dirn in symset:
+                by_dir.setdefault(dirn, []).append(lid)
+            sels_g = []
+            for dirn in sorted(by_dir):
+                for lo, hi in _fuse_label_runs(by_dir[dirn]):
+                    sels_g.append((dirn, range_sel(lo, hi)))
+            group_sels.append(sels_g)
 
         def expand(frontier):
             nxt = jnp.zeros_like(frontier)
@@ -463,30 +490,43 @@ def make_s2_step_fn(
 
         def one_query(s0):
             visited0 = jnp.zeros((n_states, n_nodes), jnp.bool_).at[ca.start, s0].set(True)
+            done0 = jnp.zeros((n_groups, n_nodes), jnp.bool_)
 
             def cond(state):
-                _, frontier, lev, _, _, _ = state
+                _, frontier, lev, _, _, _, _ = state
                 return jnp.logical_and(frontier.any(), lev < levels)
 
             def body(state):
-                visited, frontier, lev, q_bc, d_s2, n_bc = state
+                visited, frontier, lev, done, q_bc, d_s2, n_bc = state
                 # observed accounting: the frontier is exactly the set of
-                # newly visited product states, i.e. the broadcast-cache
-                # misses of §4.2.2 (repeat visits never re-enter it)
-                pops = frontier.sum(axis=1)  # (n_states,) states popped now
-                q_bc = q_bc + (pops.astype(jnp.float32) * b_const).sum()
-                n_bc = n_bc + jnp.where(b_const > 0, pops, 0).sum()
-                for (s_st, direction, _, _), asel in zip(acct_runs, acct_sels):
-                    end = src if direction == FWD else dst
-                    hits = jnp.logical_and(frontier[s_st, end], asel)
-                    d_s2 = d_s2 + EDGE_SYMBOLS * hits.sum().astype(jnp.float32)
+                # newly visited product states; a broadcast is charged the
+                # first time a (symbol-set, node) pair appears across ALL
+                # states of the group — the §4.2.2 cache, matching the
+                # host meter when distinct states share a symbol set
+                new_done = []
+                for gi, (symset, states_g) in enumerate(sgroups):
+                    now_g = frontier[states_g[0]]
+                    for s_st in states_g[1:]:
+                        now_g = jnp.logical_or(now_g, frontier[s_st])
+                    new_g = jnp.logical_and(now_g, jnp.logical_not(done[gi]))
+                    n_new = new_g.sum()
+                    q_bc = q_bc + (1 + len(symset)) * n_new.astype(jnp.float32)
+                    n_bc = n_bc + n_new
+                    for dirn, asel in group_sels[gi]:
+                        end = src if dirn == FWD else dst
+                        hits = jnp.logical_and(new_g[end], asel)
+                        d_s2 = d_s2 + EDGE_SYMBOLS * hits.sum().astype(jnp.float32)
+                    new_done.append(jnp.logical_or(done[gi], now_g))
+                if new_done:
+                    done = jnp.stack(new_done)
                 new = jnp.logical_and(expand(frontier), jnp.logical_not(visited))
-                return jnp.logical_or(visited, new), new, lev + 1, q_bc, d_s2, n_bc
+                return jnp.logical_or(visited, new), new, lev + 1, done, q_bc, d_s2, n_bc
 
-            visited, _, _, q_bc, d_s2, n_bc = jax.lax.while_loop(
+            visited, _, _, _, q_bc, d_s2, n_bc = jax.lax.while_loop(
                 cond,
                 body,
-                (visited0, visited0, jnp.int32(0), jnp.float32(0), jnp.float32(0), jnp.int32(0)),
+                (visited0, visited0, jnp.int32(0), done0,
+                 jnp.float32(0), jnp.float32(0), jnp.int32(0)),
             )
             acc = jnp.zeros((n_nodes,), jnp.bool_)
             for qf in ca.accepting:
@@ -520,6 +560,133 @@ def make_s2_step_fn(
     )
 
 
+def _make_frontier_step_fn(
+    ca: CompiledAutomaton,
+    n_nodes: int,
+    max_levels: int | None,
+    graph: LabeledGraph | None,
+    replication_factor: float,
+    block_size: int,
+    interpret: bool | None,
+):
+    """The fused-Pallas S2 executor (``backend="frontier_kernel"``).
+
+    Pre-stages the global graph's block-sparse tiles and the automaton's
+    fused level schedule once at build time; each call stacks the start
+    batch into chunks of ``QPAD`` (=8) queries riding the f32 row-tile
+    minimum, and runs one device-resident fixpoint per chunk — one
+    ``pallas_call`` per BFS level regardless of |transitions| × |labels|,
+    zero host syncs between levels.  The site arrays of the shared step
+    contract are accepted and ignored: retrieval is modeled on the
+    deduplicated global graph, with ``replication_factor`` scaling d_s2
+    back to the per-site-summed convention.
+
+    The §4.2 observed accounting runs inside the same fixpoint on
+    precomputed per-(symbol-set group) degree vectors, with a
+    (group, node) dedup bitmap in the loop carry — the same symbol-set
+    cache semantics as the host meter.
+    """
+    from repro.kernels.frontier import frontier as fkernel
+    from repro.kernels.frontier import ops as fops
+
+    if graph is None:
+        raise ValueError(
+            "backend='frontier_kernel' requires graph= (the placement's global graph)"
+        )
+    if graph.n_nodes != n_nodes:
+        raise ValueError(f"graph has {graph.n_nodes} nodes, executor built for {n_nodes}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bg = fops.make_blocked_graph(graph, block_size)
+    plan = fops.build_level_plan(ca, bg)
+    n_states, q_pad, v_pad = ca.n_states, plan.q_pad, plan.v_pad
+    levels = max_levels if max_levels is not None else n_states * n_nodes
+
+    sgroups = symbol_set_groups(ca)
+    n_groups = max(len(sgroups), 1)
+    # matching-edge counts per node for each group's symbol set: the
+    # unicast response size of one broadcast at that node (§4.2.2)
+    deg = np.zeros((n_groups, v_pad), np.float32)
+    payloads = np.zeros(n_groups, np.float32)
+    for gi, (symset, _) in enumerate(sgroups):
+        payloads[gi] = 1 + len(symset)
+        for lid, dirn in symset:
+            sel = slice(None) if lid < 0 else graph.lbl == lid
+            ends = (graph.src if dirn == FWD else graph.dst)[sel]
+            np.add.at(deg[gi], ends, 1.0)
+    deg_c = jnp.asarray(deg)
+    pay_c = jnp.asarray(payloads)
+    state_rows = [jnp.asarray(states, jnp.int32) for _, states in sgroups]
+
+    def fixpoint(f0):  # (n_states, q_pad, v_pad) f32 0/1
+        flat0 = f0.reshape(n_states * q_pad, v_pad)
+        zero_q = jnp.zeros((q_pad,), jnp.float32)
+
+        def cond(state):
+            _, frontier, lev = state[:3]
+            return jnp.logical_and((frontier > 0).any(), lev < levels)
+
+        def body(state):
+            visited, frontier, lev, done, q_bc, d_s2, n_bc = state
+            fr3 = frontier.reshape(n_states, q_pad, v_pad)
+            new_done = []
+            for gi, rows in enumerate(state_rows):
+                now_g = fr3[rows].max(axis=0)  # (q_pad, v_pad)
+                new_g = now_g * (1.0 - done[gi])
+                cnt = new_g.sum(axis=1)
+                q_bc = q_bc + pay_c[gi] * cnt
+                n_bc = n_bc + cnt
+                d_s2 = d_s2 + EDGE_SYMBOLS * (new_g * deg_c[gi]).sum(axis=1)
+                new_done.append(jnp.maximum(done[gi], now_g))
+            done = jnp.stack(new_done) if new_done else done
+            counts = fkernel.fused_level_blocks(
+                frontier, plan.tiles, plan.firsts, plan.tile_ids,
+                plan.f_rows, plan.f_cols, plan.o_rows, plan.o_cols,
+                plan.block_size, q_pad, interpret=interpret,
+            )
+            nxt = jnp.minimum(counts, 1.0)
+            new = nxt * (1.0 - visited)
+            return jnp.maximum(visited, new), new, lev + 1, done, q_bc, d_s2, n_bc
+
+        visited, _, _, _, q_bc, d_s2, n_bc = jax.lax.while_loop(
+            cond, body,
+            (flat0, flat0, jnp.int32(0),
+             jnp.zeros((n_groups, q_pad, v_pad), jnp.float32), zero_q, zero_q, zero_q),
+        )
+        vis3 = visited.reshape(n_states, q_pad, v_pad)
+        acc = jnp.zeros((q_pad, v_pad), jnp.float32)
+        for qf in ca.accepting:
+            acc = jnp.maximum(acc, vis3[qf])
+        return acc[:, :n_nodes] > 0, q_bc, d_s2 * replication_factor, n_bc
+
+    def fn(src, lbl, dst, mask, starts):
+        del src, lbl, dst, mask  # retrieval is modeled on the staged global tiles
+        b = starts.shape[0]
+        n_chunks = -(-b // q_pad)
+        pad = n_chunks * q_pad - b
+        if pad:
+            starts = jnp.concatenate([starts, jnp.zeros((pad,), starts.dtype)])
+        chunks = starts.reshape(n_chunks, q_pad)
+
+        def one_chunk(schunk):
+            f0 = (
+                jnp.zeros((n_states, q_pad, v_pad), jnp.float32)
+                .at[ca.start, jnp.arange(q_pad), schunk]
+                .set(1.0)
+            )
+            return fixpoint(f0)
+
+        acc, q_bc, d_s2, n_bc = jax.lax.map(one_chunk, chunks)
+        return (
+            acc.reshape(n_chunks * q_pad, n_nodes)[:b],
+            q_bc.reshape(-1)[:b],
+            d_s2.reshape(-1)[:b],
+            n_bc.reshape(-1)[:b].astype(jnp.int32),
+        )
+
+    return jax.jit(fn)
+
+
 def s2_execute(
     mesh: Mesh,
     placement: Placement,
@@ -530,6 +697,9 @@ def s2_execute(
     max_levels: int | None = None,
     step_fn=None,
     device_arrays: dict | None = None,
+    backend: str = "reference",
+    block_size: int = 128,
+    interpret: bool | None = None,
 ) -> tuple[np.ndarray, list[StrategyCost]]:
     """Run the batched S2 executor for ``start_nodes``.
 
@@ -551,7 +721,10 @@ def s2_execute(
     arrays = device_arrays if device_arrays is not None else placement.padded_device_arrays()
     if step_fn is None:
         step_fn = make_s2_step_fn(
-            ca, placement.graph.n_nodes, mesh, site_axes, batch_axis, max_levels
+            ca, placement.graph.n_nodes, mesh, site_axes, batch_axis, max_levels,
+            backend=backend, graph=placement.graph,
+            replication_factor=placement.replication_factor,
+            block_size=block_size, interpret=interpret,
         )
     acc, q_bc, d_s2, n_bc = step_fn(
         jnp.asarray(arrays["src"]),

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: blocked boolean-semiring frontier expansion.
+"""Pallas TPU kernels: blocked boolean-semiring frontier expansion.
 
 The PAA's per-transition work is F' |= F @ A_l where F is the (n_states ×
 V) frontier and A_l the V×V adjacency of one label.  On TPU we tile V
@@ -8,14 +8,28 @@ r(t) and block col c(t):
 
     OUT[:, c(t)·B:(c(t)+1)·B]  |=  F[:, r(t)·B:(r(t)+1)·B] @ TILE(t)
 
-Grid = one step per nonzero tile, tiles pre-sorted by block column so all
-writes to one output block are consecutive grid steps (the TPU-legal
-output-revisiting pattern); block ids arrive via scalar prefetch
-(PrefetchScalarGridSpec) and drive the BlockSpec index_maps.
+Two grid layouts share this primitive:
+
+* :func:`frontier_step_blocks` — ONE (transition, label) tile list per
+  call; grid = one step per nonzero tile, tiles pre-sorted by block
+  column so all writes to one output block are consecutive grid steps
+  (the TPU-legal output-revisiting pattern).  This is the per-transition
+  baseline: a BFS level costs one dispatch per transition × label entry.
+
+* :func:`fused_level_blocks` — an ENTIRE BFS level over all transitions
+  of the automaton in one call.  The frontier operand is
+  (n_states · q_pad, v_pad): row-block s is automaton state s, and the
+  q_pad (= 8, the f32 sublane minimum that a single-query kernel would
+  waste) rows inside a block carry up to 8 independent queries' frontiers.
+  The grid concatenates every (transition, label) tile list, sorted by
+  (dst_state, block_col); per-step scalar prefetch ids select the input
+  row-block (src automaton state), the input col-block (tile block row),
+  the tile, and the output (dst state, block col).  Dispatch count per
+  level is exactly 1, independent of |transitions| and |labels|.
 
 Boolean OR is implemented as saturating add in f32 (counts then >0) —
 MXU-native, exact for path-counting up to 2^24 (f32 integer range), and
-the wrapper thresholds back to {0,1}.
+the wrappers threshold back to {0,1}.
 """
 
 from __future__ import annotations
@@ -24,6 +38,33 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+try:  # JAX >= 0.6 removed the jaxpr types from the jax.core namespace
+    from jax.extend.core import ClosedJaxpr, Jaxpr
+except ImportError:  # JAX 0.4.x
+    from jax.core import ClosedJaxpr, Jaxpr
+
+
+def count_pallas_calls(fn, *args, **kwargs) -> int:
+    """Number of ``pallas_call`` equations in ``fn``'s jaxpr — the Pallas
+    dispatch count of one call, robust to jit caching (pjit/while bodies
+    are recursed into).  The fused-level acceptance test asserts this is
+    1 per BFS level."""
+
+    def _count(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for val in eqn.params.values():
+                for v in val if isinstance(val, (tuple, list)) else (val,):
+                    if isinstance(v, ClosedJaxpr):
+                        n += _count(v.jaxpr)
+                    elif isinstance(v, Jaxpr):
+                        n += _count(v)
+        return n
+
+    return _count(jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args).jaxpr)
 
 
 def _frontier_kernel(rows_ref, cols_ref, f_ref, a_ref, o_ref):
@@ -66,3 +107,71 @@ def frontier_step_blocks(
         out_shape=jax.ShapeDtypeStruct((m_pad, v_pad), jnp.float32),
         interpret=interpret,
     )(block_rows, block_cols, frontier, tiles)
+
+
+def _fused_level_kernel(
+    firsts_ref, tids_ref, frows_ref, fcols_ref, orows_ref, ocols_ref, f_ref, a_ref, o_ref
+):
+    """One grid step of the fused level:
+
+        o[dst_state, :, ocol] += f[src_state, :, frow] @ tiles[tid]
+
+    where the middle dim is the q_pad stacked-query rows.  ``firsts`` is
+    precomputed on the host (steps are sorted by (dst_state, block_col),
+    so the first step of each output block is known statically) — it
+    gates the zero-init of the output block before accumulation."""
+    i = pl.program_id(0)
+
+    @pl.when(firsts_ref[i] == 1)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(f_ref[...], a_ref[0], preferred_element_type=jnp.float32)
+
+
+def fused_level_blocks(
+    frontier: jax.Array,  # (n_states * q_pad, v_pad) f32 0/1
+    tiles: jax.Array,  # (n_tiles, B, B) f32 0/1; index 0 is the zero cover tile
+    firsts: jax.Array,  # (n_steps,) int32 ∈ {0,1}: first visit to the output block
+    tile_ids: jax.Array,  # (n_steps,) int32 into tiles
+    f_rows: jax.Array,  # (n_steps,) int32: input row-block = src automaton state
+    f_cols: jax.Array,  # (n_steps,) int32: input col-block = tile block row
+    o_rows: jax.Array,  # (n_steps,) int32: output row-block = dst automaton state
+    o_cols: jax.Array,  # (n_steps,) int32: output col-block = tile block col
+    block_size: int,
+    q_pad: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """One BFS level over ALL transitions in a single pallas_call.
+
+    Steps must be sorted by (o_rows, o_cols) so each output block's
+    writes are consecutive (the TPU output-revisiting rule), and the step
+    list must cover every (dst_state, block_col) output block at least
+    once (uncovered blocks are otherwise left undefined) — the plan
+    builder appends zero-tile cover steps for that.  Returns the raw
+    count matrix (n_states * q_pad, v_pad); callers threshold >0.
+    """
+    n_rows, v_pad = frontier.shape
+    n_steps = tile_ids.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(n_steps,),
+        in_specs=[
+            pl.BlockSpec(
+                (q_pad, block_size), lambda i, fi, ti, fr, fc, orw, oc: (fr[i], fc[i])
+            ),
+            pl.BlockSpec(
+                (1, block_size, block_size),
+                lambda i, fi, ti, fr, fc, orw, oc: (ti[i], 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (q_pad, block_size), lambda i, fi, ti, fr, fc, orw, oc: (orw[i], oc[i])
+        ),
+    )
+    return pl.pallas_call(
+        _fused_level_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows, v_pad), jnp.float32),
+        interpret=interpret,
+    )(firsts, tile_ids, f_rows, f_cols, o_rows, o_cols, frontier, tiles)

@@ -1,8 +1,21 @@
-"""jit'd wrapper: multi-source PAA level using the Pallas frontier kernel.
+"""jit'd wrappers: PAA levels and fixpoints on the Pallas frontier kernels.
 
 ``make_blocked_graph`` packs every label's adjacency into block-sparse
-tiles once per graph; ``expand_level`` applies one BFS level of a
-compiled automaton (all transitions) with OR-accumulated Pallas calls.
+tiles once per graph.  Two execution paths share it:
+
+* **Fused (default)** — ``build_level_plan`` concatenates every
+  (transition, label) tile list of a compiled automaton into one grid
+  sorted by (dst_state, block_col); ``expand_level_fused`` runs a whole
+  BFS level as ONE ``pallas_call`` and ``reach_fixpoint`` wraps it in a
+  device-resident ``lax.while_loop`` (no host syncs between levels).
+  The 8-row f32 tile minimum carries up to ``QPAD`` stacked queries, so
+  ``multi_query_reach`` answers 8 start masks for the price of one.
+
+* **Per-transition baseline** — ``expand_level`` issues one Pallas call
+  per transition × label entry with a host-side merge, and
+  ``multi_source_reach_baseline`` loops levels on the host.  Kept as the
+  dispatch-count/perf baseline (see ``benchmarks/frontier_level.py``).
+
 On CPU pass ``interpret=True`` (the validation mode); on TPU the same
 code JITs to MXU tile products.
 """
@@ -17,10 +30,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.automaton import FWD, CompiledAutomaton
+from repro.core.automaton import FWD, INV, CompiledAutomaton
 from repro.graph.structure import LabeledGraph
-from repro.kernels.frontier.frontier import frontier_step_blocks
+from repro.kernels.frontier.frontier import frontier_step_blocks, fused_level_blocks
 from repro.kernels.frontier.ref import pack_blocks
+
+# f32 sublane minimum: the row-tile rows one query would waste, used to
+# stack up to QPAD independent queries' frontiers per automaton state.
+QPAD = 8
 
 
 @dataclasses.dataclass
@@ -45,6 +62,235 @@ def make_blocked_graph(graph: LabeledGraph, block_size: int = 128) -> BlockedGra
         inv[lid] = (jnp.asarray(t), jnp.asarray(r), jnp.asarray(c))
     v_pad = -(-graph.n_nodes // block_size) * block_size
     return BlockedGraph(graph.n_nodes, v_pad, block_size, fwd, inv)
+
+
+# ---------------------------------------------------------------------------
+# Fused level plan: all transitions of a level as one grid
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FusedLevelPlan:
+    """Host-built schedule for :func:`fused_level_blocks`.
+
+    One grid step per (transition, label, nonzero tile) triple, plus one
+    zero-tile cover step per output block no real step writes (so every
+    output block is initialized).  Steps are sorted by (dst_state,
+    block_col) — the output-revisiting order — and ``firsts`` marks each
+    output block's first step for the in-kernel zero-init.
+    """
+
+    n_states: int
+    n_nodes: int
+    v_pad: int
+    block_size: int
+    q_pad: int
+    n_real_steps: int  # grid steps carrying a real tile (excludes covers)
+    tiles: jnp.ndarray  # (n_tiles, B, B); index 0 is the all-zero cover tile
+    firsts: jnp.ndarray  # (n_steps,) int32 0/1
+    tile_ids: jnp.ndarray  # (n_steps,) int32
+    f_rows: jnp.ndarray  # (n_steps,) int32: src automaton state
+    f_cols: jnp.ndarray  # (n_steps,) int32: tile block row
+    o_rows: jnp.ndarray  # (n_steps,) int32: dst automaton state
+    o_cols: jnp.ndarray  # (n_steps,) int32: tile block col
+
+
+def build_level_plan(
+    ca: CompiledAutomaton, bg: BlockedGraph, q_pad: int = QPAD
+) -> FusedLevelPlan:
+    """Schedule one fused BFS level for ``ca`` over ``bg``.
+
+    Wildcard transitions expand to every label's tile list of their
+    direction; labels with empty stores (no edges) contribute nothing.
+    """
+    nb = bg.v_pad // bg.block_size
+    tile_arrays = [np.zeros((1, bg.block_size, bg.block_size), np.float32)]
+    offsets: dict[tuple[int, int], tuple[int, np.ndarray, np.ndarray]] = {}
+    off = 1
+    for direction, store in ((FWD, bg.fwd), (INV, bg.inv)):
+        for lid, (t, r, c) in store.items():
+            tile_arrays.append(np.asarray(t))
+            offsets[(direction, lid)] = (off, np.asarray(r), np.asarray(c))
+            off += int(np.asarray(t).shape[0])
+
+    steps: list[tuple[int, int, int, int, int]] = []  # (orow, ocol, frow, fcol, tid)
+    for t in ca.transitions:
+        store = bg.fwd if t.direction == FWD else bg.inv
+        lids = [t.label_id] if t.label_id >= 0 else list(store.keys())
+        for lid in lids:
+            ent = offsets.get((t.direction, lid))
+            if ent is None:
+                continue  # empty label store: no edges, nothing to expand
+            base, rows, cols = ent
+            for j in range(len(rows)):
+                steps.append((t.dst, int(cols[j]), t.src, int(rows[j]), base + j))
+    n_real = len(steps)
+
+    covered = {(s[0], s[1]) for s in steps}
+    for s_dst in range(ca.n_states):
+        for cblk in range(nb):
+            if (s_dst, cblk) not in covered:
+                steps.append((s_dst, cblk, 0, 0, 0))  # zero tile: pure init
+
+    steps.sort(key=lambda s: (s[0], s[1]))
+    arr = np.asarray(steps, np.int32).reshape(len(steps), 5)
+    firsts = np.ones(len(steps), np.int32)
+    if len(steps) > 1:
+        same = (arr[1:, 0] == arr[:-1, 0]) & (arr[1:, 1] == arr[:-1, 1])
+        firsts[1:][same] = 0
+    return FusedLevelPlan(
+        n_states=ca.n_states,
+        n_nodes=bg.n_nodes,
+        v_pad=bg.v_pad,
+        block_size=bg.block_size,
+        q_pad=q_pad,
+        n_real_steps=n_real,
+        tiles=jnp.asarray(np.concatenate(tile_arrays, axis=0)),
+        firsts=jnp.asarray(firsts),
+        tile_ids=jnp.asarray(arr[:, 4]),
+        f_rows=jnp.asarray(arr[:, 2]),
+        f_cols=jnp.asarray(arr[:, 3]),
+        o_rows=jnp.asarray(arr[:, 0]),
+        o_cols=jnp.asarray(arr[:, 1]),
+    )
+
+
+@partial(jax.jit, static_argnames=("block_size", "q_pad", "interpret"))
+def _fused_expand(
+    frontier, tiles, firsts, tids, frows, fcols, orows, ocols, *, block_size, q_pad, interpret
+):
+    counts = fused_level_blocks(
+        frontier, tiles, firsts, tids, frows, fcols, orows, ocols,
+        block_size, q_pad, interpret=interpret,
+    )
+    return jnp.minimum(counts, 1.0)
+
+
+def expand_level_fused(
+    plan: FusedLevelPlan,
+    frontier: jnp.ndarray,  # (n_states * q_pad, v_pad) f32 0/1
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One BFS level over all grounded transitions — ONE pallas_call."""
+    return _fused_expand(
+        frontier, plan.tiles, plan.firsts, plan.tile_ids,
+        plan.f_rows, plan.f_cols, plan.o_rows, plan.o_cols,
+        block_size=plan.block_size, q_pad=plan.q_pad, interpret=interpret,
+    )
+
+
+@partial(jax.jit, static_argnames=("block_size", "q_pad", "max_levels", "interpret"))
+def _reach_fixpoint(
+    frontier0, tiles, firsts, tids, frows, fcols, orows, ocols,
+    *, block_size, q_pad, max_levels, interpret,
+):
+    """Device-resident BFS fixpoint: lax.while_loop over fused levels.
+
+    The convergence reduction (``frontier.any()``) runs on device — the
+    host is only reached once, when the final visited set is fetched.
+    """
+
+    def cond(state):
+        _, frontier, lev = state
+        return jnp.logical_and((frontier > 0).any(), lev < max_levels)
+
+    def body(state):
+        visited, frontier, lev = state
+        counts = fused_level_blocks(
+            frontier, tiles, firsts, tids, frows, fcols, orows, ocols,
+            block_size, q_pad, interpret=interpret,
+        )
+        nxt = jnp.minimum(counts, 1.0)
+        new = nxt * (1.0 - visited)  # exact on {0,1} floats
+        return jnp.maximum(visited, new), new, lev + 1
+
+    visited, _, _ = jax.lax.while_loop(
+        cond, body, (frontier0, frontier0, jnp.int32(0))
+    )
+    return visited
+
+
+def reach_fixpoint(
+    plan: FusedLevelPlan,
+    frontier0: jnp.ndarray,  # (n_states * q_pad, v_pad) f32 0/1
+    max_levels: int = 64,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Visited product states (same layout as ``frontier0``) at fixpoint."""
+    return _reach_fixpoint(
+        frontier0, plan.tiles, plan.firsts, plan.tile_ids,
+        plan.f_rows, plan.f_cols, plan.o_rows, plan.o_cols,
+        block_size=plan.block_size, q_pad=plan.q_pad,
+        max_levels=max_levels, interpret=interpret,
+    )
+
+
+def stack_start_masks(
+    plan: FusedLevelPlan, start_state: int, start_masks: np.ndarray
+) -> np.ndarray:
+    """Pack Q ≤ q_pad per-query start masks (Q, n_nodes) into the fused
+    frontier layout (n_states * q_pad, v_pad): row s·q_pad + q is query
+    q's frontier for automaton state s."""
+    q = start_masks.shape[0]
+    if q > plan.q_pad:
+        raise ValueError(f"at most q_pad={plan.q_pad} stacked queries, got {q}")
+    f0 = np.zeros((plan.n_states, plan.q_pad, plan.v_pad), np.float32)
+    f0[start_state, :q, : start_masks.shape[1]] = start_masks
+    return f0.reshape(plan.n_states * plan.q_pad, plan.v_pad)
+
+
+def multi_query_reach(
+    ca: CompiledAutomaton,
+    bg: BlockedGraph,
+    start_masks: np.ndarray,  # (Q, n_nodes) f32 0/1 — one row per query
+    max_levels: int = 64,
+    interpret: bool = True,
+    plan: FusedLevelPlan | None = None,
+) -> np.ndarray:
+    """Fixpoint reachability for Q stacked queries; returns (Q, n_nodes)
+    bool answer masks (nodes reached in an accepting state, per query).
+
+    Queries ride the q_pad row dim in chunks of 8 — each chunk is ONE
+    device-resident fixpoint (one jit call, zero host syncs between
+    levels).  Pass a prebuilt ``plan`` to amortize schedule construction
+    across calls.
+    """
+    start_masks = np.atleast_2d(np.asarray(start_masks, np.float32))
+    if plan is None:
+        plan = build_level_plan(ca, bg)
+    n_q = start_masks.shape[0]
+    out = np.zeros((n_q, bg.n_nodes), bool)
+    for lo in range(0, n_q, plan.q_pad):
+        chunk = start_masks[lo : lo + plan.q_pad]
+        f0 = stack_start_masks(plan, ca.start, chunk)
+        visited = np.asarray(
+            reach_fixpoint(plan, jnp.asarray(f0), max_levels, interpret)
+        ).reshape(plan.n_states, plan.q_pad, plan.v_pad)
+        acc = np.zeros((plan.q_pad, plan.v_pad), np.float32)
+        for qf in ca.accepting:
+            acc = np.maximum(acc, visited[qf])
+        out[lo : lo + chunk.shape[0]] = acc[: chunk.shape[0], : bg.n_nodes] > 0
+    return out
+
+
+def multi_source_reach(
+    ca: CompiledAutomaton,
+    bg: BlockedGraph,
+    start_mask: np.ndarray,
+    max_levels: int = 64,
+    interpret: bool = True,
+    plan: FusedLevelPlan | None = None,
+) -> np.ndarray:
+    """Single-query fixpoint reachability on the fused level kernel."""
+    return multi_query_reach(
+        ca, bg, np.asarray(start_mask, np.float32)[None, :],
+        max_levels=max_levels, interpret=interpret, plan=plan,
+    )[0]
+
+
+# ---------------------------------------------------------------------------
+# Per-transition baseline (one dispatch per transition × label entry)
+# ---------------------------------------------------------------------------
 
 
 @partial(jax.jit, static_argnames=("block_size", "interpret"))
@@ -74,7 +320,11 @@ def expand_level(
     frontier: jnp.ndarray,  # (n_states, v_pad) f32 0/1 — rows = automaton states
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """One BFS level over all grounded transitions; returns new 0/1 mask."""
+    """One BFS level over all grounded transitions; returns new 0/1 mask.
+
+    Baseline path: one Pallas dispatch per transition × label entry plus
+    a host-side merge — see :func:`expand_level_fused` for the fused
+    single-dispatch form."""
     out = jnp.zeros((ca.n_states, bg.v_pad), jnp.float32)
     for t in ca.transitions:
         store = bg.fwd if t.direction == FWD else bg.inv
@@ -94,15 +344,16 @@ def expand_level(
     return (out > 0).astype(jnp.float32)
 
 
-def multi_source_reach(
+def multi_source_reach_baseline(
     ca: CompiledAutomaton,
     bg: BlockedGraph,
     start_mask: np.ndarray,
     max_levels: int = 64,
     interpret: bool = True,
 ) -> np.ndarray:
-    """Fixpoint reachability with the Pallas level kernel (host loop —
-    level count is data-dependent and small)."""
+    """Fixpoint reachability with per-transition level dispatches and a
+    host loop (one device→host sync per level) — the pre-fusion path,
+    kept as the benchmark baseline."""
     frontier = np.zeros((ca.n_states, bg.v_pad), np.float32)
     frontier[ca.start, : len(start_mask)] = start_mask
     visited = frontier.copy()

@@ -49,3 +49,35 @@ def frontier_step_ref(
 def frontier_step_dense_ref(frontier: jax.Array, adj: jax.Array) -> jax.Array:
     """Fully dense oracle: F @ A (counts)."""
     return frontier @ adj
+
+
+def fused_level_ref(ca, graph, frontier: np.ndarray) -> np.ndarray:
+    """Dense numpy oracle for one fused multi-query level.
+
+    ``frontier`` is (n_states, Q, v_pad) 0/1; returns the same-shaped 0/1
+    expansion: for every grounded transition (wildcards over all labels,
+    INV over the transposed adjacency), out[dst] |= frontier[src] @ A.
+    """
+    from repro.core.automaton import FWD
+
+    _, _, v_pad = frontier.shape
+    dense: dict[tuple[int, int], np.ndarray] = {}
+
+    def adj_for(label_id: int, direction: int) -> np.ndarray:
+        key = (label_id, direction)
+        if key not in dense:
+            a = np.zeros((v_pad, v_pad), np.float32)
+            sel = slice(None) if label_id < 0 else graph.lbl == label_id
+            src, dst = graph.src[sel], graph.dst[sel]
+            if direction == FWD:
+                a[src, dst] = 1.0
+            else:
+                a[dst, src] = 1.0
+            dense[key] = a
+        return dense[key]
+
+    out = np.zeros_like(frontier)
+    for t in ca.transitions:
+        a = adj_for(t.label_id, t.direction)
+        out[t.dst] = np.maximum(out[t.dst], np.minimum(frontier[t.src] @ a, 1.0))
+    return (out > 0).astype(np.float32)

@@ -211,13 +211,17 @@ def automaton_signature(
     site_axes: tuple[str, ...] = ("data",),
     batch_axis: str | None = "model",
     max_levels: int | None = None,
+    backend: str = "reference",
+    block_size: int = 128,
 ) -> tuple:
     """Structural identity of a compiled S2 executor.
 
     Everything :func:`~repro.core.strategies.make_s2_step_fn` closes over:
-    the fused transition runs, start/accepting states, node count, and the
-    mesh/axis configuration.  Two queries with equal signatures produce
-    byte-identical step functions and therefore share one jit cache.
+    the fused transition runs, start/accepting states, node count, the
+    mesh/axis configuration, and the backend (+ its tile block size for
+    the fused frontier-kernel backend).  Two queries with equal
+    signatures produce byte-identical step functions and therefore share
+    one jit cache.
     """
     mesh_key = tuple((n, int(mesh.shape[n])) for n in mesh.axis_names)
     return (
@@ -230,6 +234,8 @@ def automaton_signature(
         tuple(site_axes),
         batch_axis,
         max_levels,
+        backend,
+        block_size,
     )
 
 
@@ -249,19 +255,30 @@ class ExecutorCache:
         batch_axis: str | None = "model",
         max_levels: int | None = None,
         signature: tuple | None = None,
+        backend: str = "reference",
+        graph: Any = None,
+        replication_factor: float = 1.0,
+        block_size: int = 128,
+        interpret: bool | None = None,
     ) -> tuple[tuple, Callable]:
         """``signature`` accepts the precomputed key (the service computes
         it once per request during planning) to skip re-deriving the
-        transition runs here."""
+        transition runs here.  The backend extras (``graph``,
+        ``replication_factor``, ``block_size``, ``interpret``) are only
+        consulted by the ``frontier_kernel`` backend."""
         sig = (
             signature
             if signature is not None
-            else automaton_signature(ca, n_nodes, mesh, site_axes, batch_axis, max_levels)
+            else automaton_signature(
+                ca, n_nodes, mesh, site_axes, batch_axis, max_levels, backend, block_size
+            )
         )
         fn = self._lru.get(sig)
         if fn is None:
             fn = strategies.make_s2_step_fn(
-                ca, n_nodes, mesh, site_axes, batch_axis, max_levels
+                ca, n_nodes, mesh, site_axes, batch_axis, max_levels,
+                backend=backend, graph=graph, replication_factor=replication_factor,
+                block_size=block_size, interpret=interpret,
             )
             self._lru.put(sig, fn)
             self.builds += 1

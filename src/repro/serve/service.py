@@ -63,6 +63,11 @@ class ServeConfig:
     site_axes: tuple[str, ...] = ("data",)
     batch_axis: str | None = "model"
     max_levels: int | None = None
+    # S2 executor backend: "reference" (shard_map gather/scatter) or
+    # "frontier_kernel" (fused Pallas level, 8 queries per row tile —
+    # see repro.kernels.frontier); the latter's tile block size below
+    s2_backend: str = "reference"
+    s2_block_size: int = 128
     calibration_decay: float = 0.3
     seed: int = 0
 
@@ -241,6 +246,7 @@ class QueryService:
                 sig=plancache.automaton_signature(
                     ca, self.placement.graph.n_nodes, self.mesh,
                     cfg.site_axes, cfg.batch_axis, cfg.max_levels,
+                    cfg.s2_backend, cfg.s2_block_size,
                 ),
             )
             self.plan_cache.put(key, self.stats_epoch, entry)
@@ -270,6 +276,11 @@ class QueryService:
         multiple = 1
         if cfg.batch_axis and cfg.batch_axis in self.mesh.axis_names:
             multiple = int(self.mesh.shape[cfg.batch_axis])
+        if cfg.s2_backend == "frontier_kernel":
+            # fill the fused kernel's 8-row query stacking before growing
+            from repro.kernels.frontier.ops import QPAD
+
+            multiple = max(multiple, QPAD)
 
         for group in batcher.group_by_signature(reqs, lambda r: r.sig):
             try:
@@ -277,6 +288,9 @@ class QueryService:
                     group[0].ca, self.placement.graph.n_nodes, self.mesh,
                     cfg.site_axes, cfg.batch_axis, cfg.max_levels,
                     signature=group[0].sig,
+                    backend=cfg.s2_backend, graph=self.placement.graph,
+                    replication_factor=self.placement.replication_factor,
+                    block_size=cfg.s2_block_size,
                 )
 
                 def execute(starts, exemplar):

@@ -189,20 +189,83 @@ def test_s2_batched_queries_share_one_call(setup):
     assert rec.exec_batch_size == 8
 
 
-def test_s1_coalescing_groups_by_label_budget():
-    class Item:
-        def __init__(self, mask):
-            self.label_mask = np.array(mask, bool)
+def test_s2_frontier_kernel_backend_serves_oracle_answers(setup):
+    """ServeConfig(s2_backend="frontier_kernel"): same-signature queries
+    share one fused-grid executor (batch padded to the 8-query row tile)
+    and every answer matches the centralized PAA."""
+    g, placement, mesh = setup
+    dg = to_device_graph(g)
+    svc = QueryService(
+        placement, mesh, NET,
+        config=ServeConfig(
+            n_rollouts=50, s2_backend="frontier_kernel", s2_block_size=8
+        ),
+    )
+    t1 = svc.enqueue("(a|b)+", np.arange(g.n_nodes, dtype=np.int32), strategy="S2")
+    t2 = svc.enqueue("(b|a)+", [0, 3], strategy="S2")  # same signature: one batch
+    svc.flush()
+    for t, q in ((t1, "(a|b)+"), (t2, "(b|a)+")):
+        ans = t.result()
+        ca = paa.compile_query(q, g)
+        for i, s in enumerate(ans.starts):
+            oracle = set(
+                np.nonzero(np.asarray(paa.answers_single_source(ca, dg, int(s))))[0].tolist()
+            )
+            assert ans.answers[i] == oracle, (q, int(s))
+    assert svc.exec_cache.builds == 1  # signature-shared fused executor
+    # batches pad to the fused kernel's 8-row query stacking
+    assert all(r.exec_batch_size % 8 == 0 for r in svc.metrics.records)
 
-    a = Item([1, 0, 0, 0])
-    b = Item([0, 1, 0, 0])
-    c = Item([0, 0, 1, 1])
+
+class _MaskItem:
+    def __init__(self, mask):
+        self.label_mask = np.array(mask, bool)
+
+
+def test_s1_coalescing_groups_by_label_budget():
+    a = _MaskItem([1, 0, 0, 0])
+    b = _MaskItem([0, 1, 0, 0])
+    c = _MaskItem([0, 0, 1, 1])
     groups = batcher.coalesce_s1([a, b, c], max_union_labels=2)
-    assert [len(grp) for grp in groups] == [2, 1]
-    assert batcher.union_mask(groups[0]).tolist() == [True, True, False, False]
+    assert sorted(len(grp) for grp in groups) == [1, 2]
+    ab = next(grp for grp in groups if len(grp) == 2)
+    assert batcher.union_mask(ab).tolist() == [True, True, False, False]
     # budget of 1: nobody coalesces, oversized items still run
     groups = batcher.coalesce_s1([a, b, c], max_union_labels=1)
     assert [len(grp) for grp in groups] == [1, 1, 1]
+
+
+def test_s1_ffd_beats_arrival_order_interleaving():
+    """The motivating case for size-aware packing: two label families
+    interleaved in arrival order.  Greedy closes a group at every switch
+    (4 gathers); FFD packs each family into one bin (2 gathers)."""
+    fam_a = [_MaskItem([1, 1, 0, 0, 0, 0]), _MaskItem([0, 1, 1, 0, 0, 0])]
+    fam_b = [_MaskItem([0, 0, 0, 1, 1, 0]), _MaskItem([0, 0, 0, 0, 1, 1])]
+    interleaved = [fam_a[0], fam_b[0], fam_a[1], fam_b[1]]
+    assert len(batcher._coalesce_greedy(interleaved, max_union_labels=3)) == 4
+    assert len(batcher.coalesce_s1(interleaved, max_union_labels=3)) == 2
+
+
+def test_s1_packing_never_splits_below_greedy_throughput():
+    """Satellite guarantee: coalesce_s1 never produces more gather rounds
+    than the old arrival-order greedy, on any stream; groups respect the
+    budget (oversized singletons excepted) and partition the items."""
+    rng = np.random.default_rng(11)
+    for trial in range(60):
+        n_labels = int(rng.integers(4, 24))
+        budget = int(rng.integers(1, n_labels + 2))
+        items = [
+            _MaskItem(rng.random(n_labels) < rng.uniform(0.05, 0.6))
+            for _ in range(int(rng.integers(1, 14)))
+        ]
+        groups = batcher.coalesce_s1(items, budget)
+        greedy = batcher._coalesce_greedy(items, budget)
+        assert len(groups) <= len(greedy), trial
+        flat = [it for grp in groups for it in grp]
+        assert sorted(map(id, flat)) == sorted(map(id, items)), trial
+        for grp in groups:
+            popcount = int(batcher.union_mask(grp).sum())
+            assert popcount <= budget or len(grp) == 1, trial
 
 
 # ---------------------------------------------------------------------------
