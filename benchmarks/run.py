@@ -18,7 +18,7 @@ import traceback
 
 KNOWN = [
     "table1", "table2", "fig2", "fig3", "fig4", "scenario6", "roofline",
-    "serve", "frontier",
+    "serve", "frontier", "dist",
 ]
 
 
@@ -39,6 +39,7 @@ def main() -> None:
         fig3_regions,
         fig4_estimation,
         frontier_level,
+        frontier_sharded,
         roofline,
         scenario6,
         serve_throughput,
@@ -56,6 +57,7 @@ def main() -> None:
         ("roofline", roofline),
         ("serve", serve_throughput),
         ("frontier", frontier_level),
+        ("dist", frontier_sharded),
     ]
 
     for name, mod in modules:

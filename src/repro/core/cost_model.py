@@ -58,11 +58,17 @@ def cost_s2(net: NetworkParams, q_bc: float, d_s2: float) -> float:
 
 
 def cost_of(net: NetworkParams, c: StrategyCost) -> float:
-    """Generic Eq. 1/2 form: N_p(2d·bc + k·uc) for any metered strategy."""
-    return net.n_peers * (
-        2.0 * net.mean_degree * c.broadcast_symbols
-        + net.replication_rate * c.unicast_symbols
-    )
+    """Generic Eq. 1/2 form: N_p(2d·bc + k·uc) for any metered strategy.
+
+    Eq. 2's ``N_p·k·D_s2`` term estimates the total unicast response
+    symbols across all sites (K = k·N_p copies of each matching edge
+    answer).  A site-aware executor (``frontier_kernel_sharded``)
+    *measures* that total per site; when ``site_unicast_symbols`` is
+    present the measured sum replaces the estimate."""
+    broadcast_cost = net.n_peers * 2.0 * net.mean_degree * c.broadcast_symbols
+    if c.site_unicast_symbols:
+        return broadcast_cost + float(sum(c.site_unicast_symbols))
+    return broadcast_cost + net.n_peers * net.replication_rate * c.unicast_symbols
 
 
 def discriminant(q_lbl: float, d_s1: float, q_bc: float, d_s2: float) -> float:

@@ -22,6 +22,14 @@ real mesh collectives via ``repro.dist.sharding.shard_map`` (sites = the
 the query batch = the ``model`` axis); the *meters* count message symbols
 with the paper's cost conventions (a symbol = one node id or label; an
 edge = 3 symbols; broadcasting b symbols costs 2·N_c·b messages).
+
+S2 has three interchangeable executor backends behind
+:func:`make_s2_step_fn` — the ``shard_map`` gather/scatter reference,
+the fused Pallas level kernel on global tiles (``frontier_kernel``),
+and the site-sharded fused kernel (``frontier_kernel_sharded``: per-site
+tile grids + per-level frontier merge, true per-site meters) — all
+metering §4.2 with the same (symbol-set, node) broadcast-cache
+semantics.
 """
 
 from __future__ import annotations
@@ -55,13 +63,23 @@ class StrategyCost:
 
     ``broadcast_symbols`` is the paper's Q_lbl (S1) / Q_bc (S2);
     ``unicast_symbols`` is D_s1 / D_s2 — *single-copy* data, the K
-    replication multiplier is applied by the cost functions (Eqs. 1–2)."""
+    replication multiplier is applied by the cost functions (Eqs. 1–2).
+
+    ``site_unicast_symbols``, when non-empty, is the *measured* per-site
+    response breakdown (raw symbols each site actually unicast, copies
+    included — one entry per site).  Only site-aware executors (the
+    ``frontier_kernel_sharded`` backend, the reference ``shard_map``
+    executor does not expose it) fill it in; ``sum(site_unicast_symbols)``
+    is then the true K-weighted response total that Eq. 2's ``k·D_s2``
+    term estimates, and :func:`repro.core.cost_model.cost_of` prefers it
+    over the estimate when present."""
 
     strategy: str
     broadcast_symbols: float
     unicast_symbols: float
     n_broadcasts: int = 0
     edges_retrieved: int = 0
+    site_unicast_symbols: tuple[float, ...] = ()
 
 
 def s1_costs(ast: Node, graph: LabeledGraph) -> StrategyCost:
@@ -398,10 +416,11 @@ def make_s2_step_fn(
     replication_factor: float = 1.0,
     block_size: int = 128,
     interpret: bool | None = None,
+    placement: Placement | None = None,
 ):
     """Build the jitted batched S2 executor.
 
-    Two backends share one call contract:
+    Three backends share one call contract:
 
     * ``"reference"`` (default) — sites (edge shards) live on
       ``site_axes``; the query batch is sharded over ``batch_axis``.
@@ -418,26 +437,47 @@ def make_s2_step_fn(
       auto-selects interpret mode off-TPU; ``replication_factor`` scales
       the returned unicast symbols to the reference backend's
       summed-per-site convention so :func:`s2_execute` can divide it
-      back out.
+      back out.  Retrieval is modeled on the deduplicated *global*
+      graph — the fastest path when one device can hold all tiles.
+
+    * ``"frontier_kernel_sharded"`` — the fused kernel on *site-local*
+      edge partitions (``placement`` required): each site's tile lists
+      are built from its own edges, padded to one common grid shape, and
+      run under ``shard_map`` over ``site_axes`` with a per-level
+      ``pmax`` frontier merge and a global convergence reduction — the
+      paper's distribution model (per-site local expansion + frontier
+      exchange per level) on the fused Pallas path.  The §4.2 meters run
+      per site on site-local degree vectors, so the returned costs carry
+      the *true* per-site response breakdown instead of a
+      replication-factor approximation.
 
     Returns ``fn(src, lbl, dst, mask, starts) -> (answers, q_bc, d_s2,
-    n_bc)`` with shapes src/lbl/dst/mask: (n_sites, E_site) int32/bool;
-    starts: (B,) int32; answers: (B, n_nodes) bool.  The three extra
-    outputs are the *observed* §4.2 message accounting, computed in the
-    loop itself: ``q_bc[i]`` is broadcast symbols, ``d_s2[i]`` is unicast
-    response symbols summed over every site holding a matching edge (so
-    replicated copies count, i.e. ≈ K·D_s2), and ``n_bc[i]`` is the
-    number of distinct broadcast searches.  Both meters deduplicate
-    broadcasts by (symbol-set, node) — the §4.2.2 cache key — so they
-    agree with the host meter even when distinct states share a symbol
-    set.
+    n_bc)`` — the sharded backend appends a fifth output ``d_s2_sites``
+    of shape (n_sites, B) — with shapes src/lbl/dst/mask: (n_sites,
+    E_site) int32/bool; starts: (B,) int32; answers: (B, n_nodes) bool.
+    The extra outputs are the *observed* §4.2 message accounting,
+    computed in the loop itself: ``q_bc[i]`` is broadcast symbols,
+    ``d_s2[i]`` is unicast response symbols summed over every site
+    holding a matching edge (so replicated copies count, i.e. ≈ K·D_s2),
+    and ``n_bc[i]`` is the number of distinct broadcast searches.  All
+    meters deduplicate broadcasts by (symbol-set, node) — the §4.2.2
+    cache key — so they agree with the host meter even when distinct
+    states share a symbol set.
     """
     if backend == "frontier_kernel":
         return _make_frontier_step_fn(
             ca, n_nodes, max_levels, graph, replication_factor, block_size, interpret
         )
+    if backend == "frontier_kernel_sharded":
+        return _make_frontier_sharded_step_fn(
+            ca, n_nodes, mesh, site_axes, batch_axis, max_levels, placement,
+            block_size, interpret,
+        )
     if backend != "reference":
-        raise ValueError(f"backend must be 'reference' or 'frontier_kernel', got {backend!r}")
+        raise ValueError(
+            "backend must be 'reference', 'frontier_kernel', or "
+            f"'frontier_kernel_sharded', got {backend!r}"
+        )
     n_states = ca.n_states
     levels = max_levels if max_levels is not None else n_states * n_nodes
 
@@ -579,7 +619,9 @@ def _make_frontier_step_fn(
     zero host syncs between levels.  The site arrays of the shared step
     contract are accepted and ignored: retrieval is modeled on the
     deduplicated global graph, with ``replication_factor`` scaling d_s2
-    back to the per-site-summed convention.
+    back to the per-site-summed convention — use
+    :func:`_make_frontier_sharded_step_fn` when retrieval must honor the
+    actual site partition.
 
     The §4.2 observed accounting runs inside the same fixpoint on
     precomputed per-(symbol-set group) degree vectors, with a
@@ -606,15 +648,8 @@ def _make_frontier_step_fn(
     n_groups = max(len(sgroups), 1)
     # matching-edge counts per node for each group's symbol set: the
     # unicast response size of one broadcast at that node (§4.2.2)
-    deg = np.zeros((n_groups, v_pad), np.float32)
-    payloads = np.zeros(n_groups, np.float32)
-    for gi, (symset, _) in enumerate(sgroups):
-        payloads[gi] = 1 + len(symset)
-        for lid, dirn in symset:
-            sel = slice(None) if lid < 0 else graph.lbl == lid
-            ends = (graph.src if dirn == FWD else graph.dst)[sel]
-            np.add.at(deg[gi], ends, 1.0)
-    deg_c = jnp.asarray(deg)
+    deg, payloads = _site_symbol_degrees(sgroups, [graph], v_pad)
+    deg_c = jnp.asarray(deg[0])
     pay_c = jnp.asarray(payloads)
     state_rows = [jnp.asarray(states, jnp.int32) for _, states in sgroups]
 
@@ -687,6 +722,220 @@ def _make_frontier_step_fn(
     return jax.jit(fn)
 
 
+def _site_symbol_degrees(
+    sgroups, site_graphs, v_pad: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-site, per-symbol-set-group matching-edge counts by node.
+
+    ``deg[s, g, v]`` is the number of edges site ``s`` holds that match
+    group ``g``'s symbol set and are incident (in the search direction)
+    to node ``v`` — the unicast response size site ``s`` contributes to
+    one broadcast at ``v`` (§4.2.2).  ``payloads[g]`` is the broadcast
+    payload 1 + |symset|.
+    """
+    n_groups = max(len(sgroups), 1)
+    deg = np.zeros((len(site_graphs), n_groups, v_pad), np.float32)
+    payloads = np.zeros(n_groups, np.float32)
+    for gi, (symset, _) in enumerate(sgroups):
+        payloads[gi] = 1 + len(symset)
+        for s, g_s in enumerate(site_graphs):
+            for lid, dirn in symset:
+                sel = slice(None) if lid < 0 else g_s.lbl == lid
+                ends = (g_s.src if dirn == FWD else g_s.dst)[sel]
+                np.add.at(deg[s, gi], ends, 1.0)
+    return deg, payloads
+
+
+def _make_frontier_sharded_step_fn(
+    ca: CompiledAutomaton,
+    n_nodes: int,
+    mesh: Mesh,
+    site_axes: tuple[str, ...],
+    batch_axis: str | None,
+    max_levels: int | None,
+    placement: Placement | None,
+    block_size: int,
+    interpret: bool | None,
+):
+    """The site-sharded fused-Pallas S2 executor
+    (``backend="frontier_kernel_sharded"``).
+
+    Honors the paper's distribution model on the fused kernel path: each
+    site's block-sparse tiles come from *its own* edge partition
+    (replication included), padded to one common grid shape so a single
+    jitted program serves every site.  One BFS level is then, under
+    ``shard_map`` over ``site_axes``:
+
+        local expansion   — one ``fused_level_blocks`` call per site on
+                            its local tiles (all transitions fused),
+        frontier exchange — ``lax.pmax`` of the thresholded counts over
+                            the site axes (boolean OR of per-site
+                            contributions — the collective form of
+                            'broadcast search + unicast responses'),
+        convergence       — ``(frontier > 0).any()`` on the merged
+                            (replicated) frontier inside the same
+                            device-resident ``lax.while_loop``.
+
+    The §4.2 observed accounting runs per site: site-local degree
+    vectors meter each site's actual response symbols (a (group, node)
+    dedup bitmap keeps the §4.2.2 broadcast-cache semantics), so the
+    executor returns the true per-site breakdown ``d_s2_sites`` —
+    (n_sites, B) — alongside the psum'd total, instead of the global
+    backend's ``replication_factor`` approximation.
+
+    The start batch is sharded over ``batch_axis`` (as in the reference
+    backend): each batch shard runs its own q_pad-chunked fixpoints
+    against the full (replicated-over-batch) site tiles.
+    """
+    from repro.kernels.frontier import frontier as fkernel
+    from repro.kernels.frontier import ops as fops
+
+    if placement is None:
+        raise ValueError(
+            "backend='frontier_kernel_sharded' requires placement= (the site partition)"
+        )
+    if placement.graph.n_nodes != n_nodes:
+        raise ValueError(
+            f"placement has {placement.graph.n_nodes} nodes, executor built for {n_nodes}"
+        )
+    axis_size = 1
+    for ax in site_axes:
+        axis_size *= int(mesh.shape[ax])
+    if placement.n_sites % axis_size:
+        raise ValueError(
+            f"n_sites={placement.n_sites} must be divisible by the site-axis "
+            f"size {axis_size} (sites are blocked over {site_axes})"
+        )
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    site_graphs = [placement.local_graph(s) for s in range(placement.n_sites)]
+    plan = fops.build_sharded_level_plan(ca, site_graphs, block_size)
+    n_states, q_pad, v_pad = ca.n_states, plan.q_pad, plan.v_pad
+    levels = max_levels if max_levels is not None else n_states * n_nodes
+
+    sgroups = symbol_set_groups(ca)
+    n_groups = max(len(sgroups), 1)
+    deg, payloads = _site_symbol_degrees(sgroups, site_graphs, v_pad)
+    deg_c = jnp.asarray(deg)
+    pay_c = jnp.asarray(payloads)
+    state_rows = [jnp.asarray(states, jnp.int32) for _, states in sgroups]
+
+    def local(tiles, firsts, tids, frows, fcols, orows, ocols, deg_l, starts):
+        # leading dim of every plan array = this device's block of sites
+        s_local = tiles.shape[0]
+
+        def fixpoint(flat0):  # (n_states * q_pad, v_pad) f32 0/1
+            zero_q = jnp.zeros((q_pad,), jnp.float32)
+
+            def cond(state):
+                _, frontier, lev = state[:3]
+                return jnp.logical_and((frontier > 0).any(), lev < levels)
+
+            def body(state):
+                visited, frontier, lev, done, q_bc, d_site, n_bc = state
+                fr3 = frontier.reshape(n_states, q_pad, v_pad)
+                # §4.2 meters on the (replicated) merged frontier: the
+                # broadcast side is global, the response side per site
+                new_done = []
+                for gi, rows in enumerate(state_rows):
+                    now_g = fr3[rows].max(axis=0)  # (q_pad, v_pad)
+                    new_g = now_g * (1.0 - done[gi])
+                    cnt = new_g.sum(axis=1)
+                    q_bc = q_bc + pay_c[gi] * cnt
+                    n_bc = n_bc + cnt
+                    d_site = d_site + EDGE_SYMBOLS * jnp.einsum(
+                        "qv,sv->sq", new_g, deg_l[:, gi]
+                    )
+                    new_done.append(jnp.maximum(done[gi], now_g))
+                done = jnp.stack(new_done) if new_done else done
+                # local expansion: each site's fused level on its own tiles
+                merged = jnp.zeros_like(frontier)
+                for sl in range(s_local):
+                    counts = fkernel.fused_level_blocks(
+                        frontier, tiles[sl], firsts[sl], tids[sl],
+                        frows[sl], fcols[sl], orows[sl], ocols[sl],
+                        plan.block_size, q_pad, interpret=interpret,
+                    )
+                    merged = jnp.maximum(merged, jnp.minimum(counts, 1.0))
+                # frontier exchange: OR the per-site contributions
+                for ax in site_axes:
+                    merged = jax.lax.pmax(merged, ax)
+                new = merged * (1.0 - visited)
+                return jnp.maximum(visited, new), new, lev + 1, done, q_bc, d_site, n_bc
+
+            visited, _, _, _, q_bc, d_site, n_bc = jax.lax.while_loop(
+                cond, body,
+                (flat0, flat0, jnp.int32(0),
+                 jnp.zeros((n_groups, q_pad, v_pad), jnp.float32),
+                 zero_q, jnp.zeros((s_local, q_pad), jnp.float32), zero_q),
+            )
+            vis3 = visited.reshape(n_states, q_pad, v_pad)
+            acc = jnp.zeros((q_pad, v_pad), jnp.float32)
+            for qf in ca.accepting:
+                acc = jnp.maximum(acc, vis3[qf])
+            return acc[:, :n_nodes] > 0, q_bc, d_site, n_bc
+
+        b = starts.shape[0]
+        n_chunks = -(-b // q_pad)
+        pad = n_chunks * q_pad - b
+        if pad:
+            starts = jnp.concatenate([starts, jnp.zeros((pad,), starts.dtype)])
+        chunks = starts.reshape(n_chunks, q_pad)
+
+        def one_chunk(schunk):
+            f0 = (
+                jnp.zeros((n_states, q_pad, v_pad), jnp.float32)
+                .at[ca.start, jnp.arange(q_pad), schunk]
+                .set(1.0)
+            )
+            return fixpoint(f0.reshape(n_states * q_pad, v_pad))
+
+        acc, q_bc, d_site, n_bc = jax.lax.map(one_chunk, chunks)
+        # d_site: (n_chunks, s_local, q_pad) -> (s_local, B)
+        d_site = d_site.transpose(1, 0, 2).reshape(s_local, n_chunks * q_pad)[:, :b]
+        d_total = d_site.sum(axis=0)
+        for ax in site_axes:
+            d_total = jax.lax.psum(d_total, ax)
+        return (
+            acc.reshape(n_chunks * q_pad, n_nodes)[:b],
+            q_bc.reshape(-1)[:b],
+            d_total,
+            n_bc.reshape(-1)[:b].astype(jnp.int32),
+            d_site,
+        )
+
+    spec_s = lambda extra: P(site_axes, *([None] * extra))  # noqa: E731
+    b_ax = batch_axis if batch_axis and batch_axis in mesh.axis_names else None
+    spec_b = P(b_ax) if b_ax else P()
+    sharded = shd.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            spec_s(3),  # tiles (n_sites, n_tiles, B, B)
+            spec_s(1), spec_s(1), spec_s(1), spec_s(1), spec_s(1), spec_s(1),
+            spec_s(2),  # deg (n_sites, n_groups, v_pad)
+            spec_b,  # starts: sharded over the batch axis, every site sees
+            # its batch shard's full frontier (the broadcast half)
+        ),
+        out_specs=(
+            P(b_ax, None) if b_ax else P(None, None),
+            spec_b, spec_b, spec_b,
+            P(site_axes, b_ax),  # per-site × per-query response meters
+        ),
+        check_vma=False,
+    )
+
+    def fn(src, lbl, dst, mask, starts):
+        del src, lbl, dst, mask  # retrieval runs on the staged per-site tiles
+        return sharded(
+            plan.tiles, plan.firsts, plan.tile_ids,
+            plan.f_rows, plan.f_cols, plan.o_rows, plan.o_cols,
+            deg_c, starts,
+        )
+
+    return jax.jit(fn)
+
+
 def s2_execute(
     mesh: Mesh,
     placement: Placement,
@@ -717,22 +966,39 @@ def s2_execute(
     (automaton signature, n_nodes, mesh) triple.  ``device_arrays``
     accepts the placement's (already staged) padded site arrays so a
     serving loop does not rebuild them per call.
+
+    The site-sharded backend's step functions return a fifth output —
+    the per-site response breakdown — which lands on each cost's
+    ``site_unicast_symbols`` (true per-site §4.2 retrieval counts; their
+    sum is the K-weighted total the other backends approximate).
     """
-    arrays = device_arrays if device_arrays is not None else placement.padded_device_arrays()
+    if device_arrays is not None:
+        arrays = device_arrays
+    elif step_fn is None and backend in ("frontier_kernel", "frontier_kernel_sharded"):
+        # the fused backends read only their staged tile plans; skip the
+        # O(n_sites × max_edges) packing + transfer of unused site arrays
+        arrays = {
+            k: np.zeros((1, 1), bool if k == "mask" else np.int32)
+            for k in ("src", "lbl", "dst", "mask")
+        }
+    else:
+        arrays = placement.padded_device_arrays()
     if step_fn is None:
         step_fn = make_s2_step_fn(
             ca, placement.graph.n_nodes, mesh, site_axes, batch_axis, max_levels,
             backend=backend, graph=placement.graph,
             replication_factor=placement.replication_factor,
-            block_size=block_size, interpret=interpret,
+            block_size=block_size, interpret=interpret, placement=placement,
         )
-    acc, q_bc, d_s2, n_bc = step_fn(
+    out = step_fn(
         jnp.asarray(arrays["src"]),
         jnp.asarray(arrays["lbl"]),
         jnp.asarray(arrays["dst"]),
         jnp.asarray(arrays["mask"]),
         jnp.asarray(np.asarray(start_nodes, np.int32)),
     )
+    acc, q_bc, d_s2, n_bc = out[:4]
+    d_sites = np.asarray(out[4]) if len(out) > 4 else None  # (n_sites, B)
     q_bc, d_s2, n_bc = (np.asarray(a) for a in (q_bc, d_s2, n_bc))
     k_rep = max(placement.replication_factor, 1e-9)
     costs = [
@@ -742,6 +1008,9 @@ def s2_execute(
             unicast_symbols=float(d_s2[i]) / k_rep,
             n_broadcasts=int(n_bc[i]),
             edges_retrieved=int(round(float(d_s2[i]) / (EDGE_SYMBOLS * k_rep))),
+            site_unicast_symbols=(
+                tuple(float(x) for x in d_sites[:, i]) if d_sites is not None else ()
+            ),
         )
         for i in range(len(q_bc))
     ]

@@ -27,6 +27,11 @@ Two grid layouts share this primitive:
   the tile, and the output (dst state, block col).  Dispatch count per
   level is exactly 1, independent of |transitions| and |labels|.
 
+:func:`fused_level_blocks` also serves the site-sharded S2 backend: each
+site runs it on a grid built from its *own* edge partition (padded to a
+common shape — see ``ops.build_sharded_level_plan``) and the per-site
+outputs OR-merge across the site axis per level.
+
 Boolean OR is implemented as saturating add in f32 (counts then >0) —
 MXU-native, exact for path-counting up to 2^24 (f32 integer range), and
 the wrappers threshold back to {0,1}.

@@ -1,7 +1,7 @@
 """jit'd wrappers: PAA levels and fixpoints on the Pallas frontier kernels.
 
 ``make_blocked_graph`` packs every label's adjacency into block-sparse
-tiles once per graph.  Two execution paths share it:
+tiles once per graph.  Three execution paths share it:
 
 * **Fused (default)** — ``build_level_plan`` concatenates every
   (transition, label) tile list of a compiled automaton into one grid
@@ -10,6 +10,13 @@ tiles once per graph.  Two execution paths share it:
   device-resident ``lax.while_loop`` (no host syncs between levels).
   The 8-row f32 tile minimum carries up to ``QPAD`` stacked queries, so
   ``multi_query_reach`` answers 8 start masks for the price of one.
+
+* **Site-sharded fused** — ``build_sharded_level_plan`` builds one such
+  schedule per *site* from that site's own edge partition and pads all
+  of them to a common grid shape; ``repro.core.strategies`` wraps the
+  per-site grids in ``shard_map`` with a per-level frontier merge
+  (``backend="frontier_kernel_sharded"``) — the paper's distribution
+  model on the fused kernel path.
 
 * **Per-transition baseline** — ``expand_level`` issues one Pallas call
   per transition × label entry with a host-side merge, and
@@ -152,6 +159,111 @@ def build_level_plan(
         f_cols=jnp.asarray(arr[:, 3]),
         o_rows=jnp.asarray(arr[:, 0]),
         o_cols=jnp.asarray(arr[:, 1]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Site-sharded level plan: one padded fused grid per site, common shape
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ShardedLevelPlan:
+    """Per-site fused level schedules padded to ONE common grid shape.
+
+    Site ``s`` holds an arbitrary edge partition; its tile lists are built
+    from *its* edges only (:func:`build_level_plan` on the site-local
+    graph), then every site's schedule is padded to the max step/tile
+    counts so a single jitted program — one ``pallas_call`` per site per
+    level — serves all sites under ``shard_map`` over the site axis.
+
+    Padding steps multiply the all-zero cover tile into the *last* output
+    block with ``firsts=0``: they keep the (o_row, o_col) sort order, hit
+    a block every plan has already initialized (cover steps guarantee full
+    coverage), and accumulate exactly zero — pure no-ops on the MXU.
+
+    All leading-``n_sites`` arrays are laid out for
+    ``shard_map(in_specs=P(site_axes, ...))``: shard the site dim, keep
+    the rest replicated per device.
+    """
+
+    n_sites: int
+    n_states: int
+    n_nodes: int
+    v_pad: int
+    block_size: int
+    q_pad: int
+    n_steps: int  # common (padded) grid length
+    n_real_steps: tuple[int, ...]  # per site: steps carrying a real tile
+    tiles: jnp.ndarray  # (n_sites, n_tiles, B, B); index 0 = zero tile
+    firsts: jnp.ndarray  # (n_sites, n_steps) int32 0/1
+    tile_ids: jnp.ndarray  # (n_sites, n_steps) int32
+    f_rows: jnp.ndarray  # (n_sites, n_steps) int32
+    f_cols: jnp.ndarray  # (n_sites, n_steps) int32
+    o_rows: jnp.ndarray  # (n_sites, n_steps) int32
+    o_cols: jnp.ndarray  # (n_sites, n_steps) int32
+
+
+def build_sharded_level_plan(
+    ca: CompiledAutomaton,
+    site_graphs: list[LabeledGraph],
+    block_size: int = 128,
+    q_pad: int = QPAD,
+) -> ShardedLevelPlan:
+    """Schedule one fused BFS level *per site* over each site's own edges.
+
+    Every site graph must share ``n_nodes`` (the global node id space) so
+    all sites agree on ``v_pad`` and block indexing; a site holding zero
+    edges (or none for some label) degenerates to a cover-only schedule.
+    """
+    if not site_graphs:
+        raise ValueError("need at least one site graph")
+    n_nodes = site_graphs[0].n_nodes
+    if any(g.n_nodes != n_nodes for g in site_graphs):
+        raise ValueError("site graphs must share the global node id space")
+    plans = [
+        build_level_plan(ca, make_blocked_graph(g, block_size), q_pad)
+        for g in site_graphs
+    ]
+    nb = plans[0].v_pad // block_size
+    n_steps = max(int(p.tile_ids.shape[0]) for p in plans)
+    n_tiles = max(int(p.tiles.shape[0]) for p in plans)
+
+    def pad_steps(arr: np.ndarray, fill: int) -> np.ndarray:
+        return np.concatenate(
+            [arr, np.full(n_steps - len(arr), fill, np.int32)]
+        )
+
+    tiles, firsts, tids, frows, fcols, orows, ocols = [], [], [], [], [], [], []
+    for p in plans:
+        t = np.asarray(p.tiles)
+        tiles.append(
+            np.concatenate(
+                [t, np.zeros((n_tiles - t.shape[0], block_size, block_size), np.float32)]
+            )
+        )
+        firsts.append(pad_steps(np.asarray(p.firsts), 0))
+        tids.append(pad_steps(np.asarray(p.tile_ids), 0))  # zero cover tile
+        frows.append(pad_steps(np.asarray(p.f_rows), 0))
+        fcols.append(pad_steps(np.asarray(p.f_cols), 0))
+        orows.append(pad_steps(np.asarray(p.o_rows), ca.n_states - 1))
+        ocols.append(pad_steps(np.asarray(p.o_cols), nb - 1))
+    return ShardedLevelPlan(
+        n_sites=len(site_graphs),
+        n_states=ca.n_states,
+        n_nodes=n_nodes,
+        v_pad=plans[0].v_pad,
+        block_size=block_size,
+        q_pad=q_pad,
+        n_steps=n_steps,
+        n_real_steps=tuple(p.n_real_steps for p in plans),
+        tiles=jnp.asarray(np.stack(tiles)),
+        firsts=jnp.asarray(np.stack(firsts)),
+        tile_ids=jnp.asarray(np.stack(tids)),
+        f_rows=jnp.asarray(np.stack(frows)),
+        f_cols=jnp.asarray(np.stack(fcols)),
+        o_rows=jnp.asarray(np.stack(orows)),
+        o_cols=jnp.asarray(np.stack(ocols)),
     )
 
 

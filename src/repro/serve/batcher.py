@@ -10,7 +10,9 @@ Two coalescing rules, one per strategy:
   request sizes).
 
 * **S1** — queries are bin-packed (first-fit-decreasing over label-mask
-  popcounts, with the arrival-order greedy as a never-worse floor) while
+  cost — raw popcount, or the estimated per-label D_s1 when the caller
+  passes sample label weights — with the arrival-order greedy as a
+  never-worse floor) while
   the union of their label masks stays under a budget; each group
   retrieves its union subgraph with a single ``s1_collect`` gather and
   every member runs its local PAA on the label-filtered view.  One
@@ -136,30 +138,73 @@ def run_s2_group(
 # ---------------------------------------------------------------------------
 
 
-def coalesce_s1(items: Sequence[Any], max_union_labels: int) -> list[list[Any]]:
-    """Size-aware grouping of S1 requests under a union-label budget.
+def _mask_cost(mask: np.ndarray, weights: np.ndarray | None) -> float:
+    """Bin size of a label mask: popcount, or the D_s1-weighted sum."""
+    if weights is None:
+        return float(mask.sum())
+    return float(weights[mask].sum())
+
+
+def _budget(max_union_labels: int, weights: np.ndarray | None) -> float:
+    """The bin capacity in the active cost unit.
+
+    Unweighted, it is the label-count budget itself.  Weighted, the
+    budget converts to symbol units at the *mean* label weight, so
+    ``max_union_labels`` keeps its meaning ("about this many
+    average-cost labels per gather"): unions of rare labels may pack
+    more labels than the raw count, unions of hot labels fewer — the
+    gather payload, not the label count, is what the budget bounds."""
+    if weights is None:
+        return float(max_union_labels)
+    mean_w = float(weights.mean())
+    if mean_w <= 0:
+        return float(max_union_labels)  # degenerate sample: all labels free
+    return max_union_labels * mean_w
+
+
+def coalesce_s1(
+    items: Sequence[Any],
+    max_union_labels: int,
+    label_weights: np.ndarray | None = None,
+) -> list[list[Any]]:
+    """Size-aware grouping of S1 requests under a union-cost budget.
 
     ``items`` carry a ``label_mask`` (n_labels,) bool attribute; each
     group costs one broadcast + gather round sized by its union mask, so
-    fewer groups = higher throughput.  First-fit-decreasing bin packing
-    over label-mask popcounts: big masks open bins first, small masks
-    backfill whatever bin still fits their *union* (overlapping masks are
-    free — the bin "size" is union popcount, not a sum).  An oversized
-    wildcard-style query still gets its own group rather than being
-    rejected.  Arrival-order greedy is kept as a floor: if FFD ever packs
-    worse (possible — union-cost bin packing has no FFD guarantee), the
-    greedy grouping is returned, so throughput never regresses vs the
-    pre-FFD batcher."""
-    ffd = _coalesce_ffd(items, max_union_labels)
-    greedy = _coalesce_greedy(items, max_union_labels)
+    fewer groups = higher throughput.  First-fit-decreasing bin packing:
+    big masks open bins first, small masks backfill whatever bin still
+    fits their *union* (overlapping masks are free — the bin "size" is a
+    union cost, not a sum).  An oversized wildcard-style query still
+    gets its own group rather than being rejected.
+
+    ``label_weights`` (n_labels,) switches the bin size from raw label
+    popcount to the estimated per-label D_s1 — e.g. ``3 × label_counts``
+    from the planner's sample (§5.2.2) — so the budget bounds the
+    *gather payload*: two hot labels can cost more than a dozen rare
+    ones.  The budget rescales to ``max_union_labels × mean(weight)``,
+    keeping the unweighted semantics when all labels cost the same.
+
+    Arrival-order greedy (under the same cost) is kept as a floor: if
+    FFD ever packs worse (possible — union-cost bin packing has no FFD
+    guarantee), the greedy grouping is returned, so throughput never
+    regresses vs the pre-FFD batcher."""
+    if label_weights is not None:
+        label_weights = np.asarray(label_weights, float)
+    ffd = _coalesce_ffd(items, max_union_labels, label_weights)
+    greedy = _coalesce_greedy(items, max_union_labels, label_weights)
     return ffd if len(ffd) <= len(greedy) else greedy
 
 
-def _coalesce_ffd(items: Sequence[Any], max_union_labels: int) -> list[list[Any]]:
-    """First-fit-decreasing by popcount; stable within equal popcounts."""
+def _coalesce_ffd(
+    items: Sequence[Any],
+    max_union_labels: int,
+    weights: np.ndarray | None = None,
+) -> list[list[Any]]:
+    """First-fit-decreasing by mask cost; stable within equal costs."""
+    budget = _budget(max_union_labels, weights)
     order = sorted(
         range(len(items)),
-        key=lambda i: (-int(np.asarray(items[i].label_mask, bool).sum()), i),
+        key=lambda i: (-_mask_cost(np.asarray(items[i].label_mask, bool), weights), i),
     )
     groups: list[list[Any]] = []
     unions: list[np.ndarray] = []
@@ -167,7 +212,7 @@ def _coalesce_ffd(items: Sequence[Any], max_union_labels: int) -> list[list[Any]
         mask = np.asarray(items[i].label_mask, bool)
         for gi, union in enumerate(unions):
             cand = union | mask
-            if int(cand.sum()) <= max_union_labels:
+            if _mask_cost(cand, weights) <= budget:
                 groups[gi].append(items[i])
                 unions[gi] = cand
                 break
@@ -177,9 +222,14 @@ def _coalesce_ffd(items: Sequence[Any], max_union_labels: int) -> list[list[Any]
     return groups
 
 
-def _coalesce_greedy(items: Sequence[Any], max_union_labels: int) -> list[list[Any]]:
+def _coalesce_greedy(
+    items: Sequence[Any],
+    max_union_labels: int,
+    weights: np.ndarray | None = None,
+) -> list[list[Any]]:
     """Arrival-order greedy (the pre-FFD batcher): a request joins the
     current group while the union stays within budget."""
+    budget = _budget(max_union_labels, weights)
     groups: list[list[Any]] = []
     union: np.ndarray | None = None
     cur: list[Any] = []
@@ -189,7 +239,7 @@ def _coalesce_greedy(items: Sequence[Any], max_union_labels: int) -> list[list[A
             cur, union = [it], mask.copy()
             continue
         candidate = union | mask
-        if int(candidate.sum()) <= max_union_labels:
+        if _mask_cost(candidate, weights) <= budget:
             cur.append(it)
             union = candidate
         else:

@@ -260,12 +260,14 @@ class ExecutorCache:
         replication_factor: float = 1.0,
         block_size: int = 128,
         interpret: bool | None = None,
+        placement: Any = None,
     ) -> tuple[tuple, Callable]:
         """``signature`` accepts the precomputed key (the service computes
         it once per request during planning) to skip re-deriving the
         transition runs here.  The backend extras (``graph``,
-        ``replication_factor``, ``block_size``, ``interpret``) are only
-        consulted by the ``frontier_kernel`` backend."""
+        ``replication_factor``, ``block_size``, ``interpret``,
+        ``placement``) are only consulted by the fused
+        ``frontier_kernel``/``frontier_kernel_sharded`` backends."""
         sig = (
             signature
             if signature is not None
@@ -278,7 +280,7 @@ class ExecutorCache:
             fn = strategies.make_s2_step_fn(
                 ca, n_nodes, mesh, site_axes, batch_axis, max_levels,
                 backend=backend, graph=graph, replication_factor=replication_factor,
-                block_size=block_size, interpret=interpret,
+                block_size=block_size, interpret=interpret, placement=placement,
             )
             self._lru.put(sig, fn)
             self.builds += 1

@@ -63,11 +63,17 @@ class ServeConfig:
     site_axes: tuple[str, ...] = ("data",)
     batch_axis: str | None = "model"
     max_levels: int | None = None
-    # S2 executor backend: "reference" (shard_map gather/scatter) or
-    # "frontier_kernel" (fused Pallas level, 8 queries per row tile —
-    # see repro.kernels.frontier); the latter's tile block size below
+    # S2 executor backend: "reference" (shard_map gather/scatter),
+    # "frontier_kernel" (fused Pallas level on the global tiles, 8
+    # queries per row tile), or "frontier_kernel_sharded" (fused Pallas
+    # level per site partition under shard_map, per-site cost meters) —
+    # see repro.kernels.frontier and serve/README.md for the selection
+    # matrix; the fused backends' tile block size below
     s2_backend: str = "reference"
     s2_block_size: int = 128
+    # S1 coalescing: weight FFD bins by the estimated per-label D_s1
+    # (sample label counts) instead of raw label popcount
+    s1_cost_weighted: bool = True
     calibration_decay: float = 0.3
     seed: int = 0
 
@@ -153,6 +159,9 @@ class QueryService:
             raise ValueError("sample must share the placement's label vocabulary")
 
         self.stats_epoch = 0
+        # per-label D_s1 estimate (3 symbols × sample edge count) — the
+        # cost-weighted S1 coalescing bins by gather payload, not label count
+        self._label_weights = strategies.EDGE_SYMBOLS * self.sample.label_counts().astype(float)
         self.model = planner.fit_model(self.sample, self.config.model_kind)
         self.plan_cache = plancache.PlanCache(self.config.plan_cache_size)
         self.exec_cache = plancache.ExecutorCache(self.config.exec_cache_size)
@@ -171,6 +180,7 @@ class QueryService:
         if sample.labels != self.placement.graph.labels:
             raise ValueError("sample must share the placement's label vocabulary")
         self.sample = sample
+        self._label_weights = strategies.EDGE_SYMBOLS * sample.label_counts().astype(float)
         self.model = planner.fit_model(sample, self.config.model_kind)
         self.stats_epoch += 1
 
@@ -276,7 +286,7 @@ class QueryService:
         multiple = 1
         if cfg.batch_axis and cfg.batch_axis in self.mesh.axis_names:
             multiple = int(self.mesh.shape[cfg.batch_axis])
-        if cfg.s2_backend == "frontier_kernel":
+        if cfg.s2_backend in ("frontier_kernel", "frontier_kernel_sharded"):
             # fill the fused kernel's 8-row query stacking before growing
             from repro.kernels.frontier.ops import QPAD
 
@@ -290,7 +300,7 @@ class QueryService:
                     signature=group[0].sig,
                     backend=cfg.s2_backend, graph=self.placement.graph,
                     replication_factor=self.placement.replication_factor,
-                    block_size=cfg.s2_block_size,
+                    block_size=cfg.s2_block_size, placement=self.placement,
                 )
 
                 def execute(starts, exemplar):
@@ -317,7 +327,8 @@ class QueryService:
     def _run_s1(self, reqs: list[_Request]) -> None:
         cfg = self.config
         graph = self.placement.graph
-        for group in batcher.coalesce_s1(reqs, cfg.s1_coalesce_labels):
+        weights = self._label_weights if cfg.s1_cost_weighted else None
+        for group in batcher.coalesce_s1(reqs, cfg.s1_coalesce_labels, weights):
             try:
                 sub = strategies.s1_collect(
                     self.mesh, self.placement, batcher.union_mask(group),

@@ -268,6 +268,64 @@ def test_s1_packing_never_splits_below_greedy_throughput():
             assert popcount <= budget or len(grp) == 1, trial
 
 
+def test_s1_cost_weighted_bins_by_d_s1_not_popcount():
+    """ROADMAP satellite: with per-label D_s1 weights, the bin size is
+    the gather payload.  Two single-label queries on a hot label exceed
+    the budget (popcount packing would coalesce them), while four rare
+    labels pack into one gather (popcount packing would need two)."""
+    # label 0 carries ~all edges; labels 1..4 are rare
+    weights = np.array([96.0, 1.0, 1.0, 1.0, 1.0])  # mean = 20
+    hot_a = _MaskItem([1, 0, 0, 0, 0])
+    hot_b = _MaskItem([1, 1, 0, 0, 0])
+    rare = [_MaskItem(np.eye(5, dtype=bool)[i]) for i in range(1, 5)]
+    budget = 2  # weighted capacity = 2 × mean = 40 symbols
+
+    weighted = batcher.coalesce_s1([hot_a, hot_b] + rare, budget, weights)
+    # each hot query is an oversized singleton; the 4 rare ones share a bin
+    assert sorted(len(g) for g in weighted) == [1, 1, 4]
+    for grp in weighted:
+        assert not (hot_a in grp and hot_b in grp)
+    # popcount packing happily coalesces the hot pair (cheap in labels,
+    # huge in gather payload) and splits the rare ones across bins
+    unweighted = batcher.coalesce_s1([hot_a, hot_b] + rare, budget)
+    assert any(hot_a in grp and hot_b in grp for grp in unweighted)
+    assert max(len(g) for g in unweighted) < 4
+
+
+def test_s1_weighted_packing_keeps_greedy_floor_and_budget():
+    """The never-worse-than-greedy guarantee and the (weighted) budget
+    hold on random streams with skewed label weights."""
+    rng = np.random.default_rng(23)
+    for trial in range(60):
+        n_labels = int(rng.integers(4, 24))
+        budget = int(rng.integers(1, n_labels + 2))
+        weights = rng.pareto(1.5, n_labels) + 0.1  # heavy-tailed label costs
+        items = [
+            _MaskItem(rng.random(n_labels) < rng.uniform(0.05, 0.6))
+            for _ in range(int(rng.integers(1, 14)))
+        ]
+        groups = batcher.coalesce_s1(items, budget, weights)
+        greedy = batcher._coalesce_greedy(items, budget, weights)
+        assert len(groups) <= len(greedy), trial
+        flat = [it for grp in groups for it in grp]
+        assert sorted(map(id, flat)) == sorted(map(id, items)), trial
+        cap = budget * float(weights.mean())
+        for grp in groups:
+            cost = float(weights[batcher.union_mask(grp)].sum())
+            assert cost <= cap + 1e-9 or len(grp) == 1, trial
+
+
+def test_s1_unweighted_weights_reduce_to_popcount():
+    """Uniform weights reproduce the popcount packing exactly (the
+    budget rescaling keeps max_union_labels semantics)."""
+    rng = np.random.default_rng(7)
+    items = [_MaskItem(rng.random(9) < 0.4) for _ in range(10)]
+    uniform = np.full(9, 3.0)
+    a = batcher.coalesce_s1(items, 4)
+    b = batcher.coalesce_s1(items, 4, uniform)
+    assert [[id(x) for x in g] for g in a] == [[id(x) for x in g] for g in b]
+
+
 # ---------------------------------------------------------------------------
 # admission queue
 # ---------------------------------------------------------------------------
