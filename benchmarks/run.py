@@ -18,7 +18,7 @@ import traceback
 
 KNOWN = [
     "table1", "table2", "fig2", "fig3", "fig4", "scenario6", "roofline",
-    "serve", "frontier", "dist",
+    "serve", "frontier", "dist", "plans",
 ]
 
 
@@ -40,6 +40,7 @@ def main() -> None:
         fig4_estimation,
         frontier_level,
         frontier_sharded,
+        plan_store,
         roofline,
         scenario6,
         serve_throughput,
@@ -58,6 +59,7 @@ def main() -> None:
         ("serve", serve_throughput),
         ("frontier", frontier_level),
         ("dist", frontier_sharded),
+        ("plans", plan_store),
     ]
 
     for name, mod in modules:

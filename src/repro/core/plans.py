@@ -1,0 +1,214 @@
+"""GraphPlanStore — the shared Stage-A cache of two-stage compilation.
+
+The paper's planner (§4) separates what depends on the *data
+distribution* from what depends on the *query*; this module gives the
+executor build path the same separation.  Everything here is
+**graph-dependent and automaton-independent** (the paper's precomputed
+per-site statistics), built once per ``(graph-stats epoch, block_size,
+placement)`` and shared by every automaton signature, both fused Pallas
+backends, and all sites:
+
+* staged global tile tensor — :func:`repro.kernels.frontier.ops.stage_graph`
+  (``backend="frontier_kernel"``),
+* staged per-site tile slabs —
+  :func:`repro.kernels.frontier.ops.stage_sharded_graph`
+  (``backend="frontier_kernel_sharded"``: n_sites packings per build
+  without the store),
+* the placement's padded site edge arrays on device (the ``reference``
+  executor's and S1's gather operands),
+* per-site site-local graph views,
+* per-(site, label, direction) degree vectors — the automaton-dependent
+  §4.2.2 meter vectors of :func:`repro.core.strategies._site_symbol_degrees`
+  reduce to cheap row sums over these.
+
+The **automaton-dependent** half (Stage B — grid ordering and the
+scalar-prefetch id arrays) stays in
+:func:`repro.kernels.frontier.ops.build_level_schedule` /
+:func:`build_sharded_level_schedule`; it never packs tiles, so a warm
+executor build for a *new* query signature on a hot graph does zero
+tile packing (asserted in ``tests/test_plan_store.py``).
+
+Invalidation: entries carry the graph-stats epoch they were built for;
+:meth:`GraphPlanStore.invalidate_epoch` drops every other epoch's
+entries in one sweep.  Dropping only removes the store's references —
+an executor already built against the old epoch keeps its staged
+arrays alive through its own closure and completes normally
+(in-flight builds for the old epoch are never broken).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable, Hashable
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.graph.partition import Placement
+from repro.graph.structure import LabeledGraph
+from repro.kernels.frontier import ops as fops
+
+
+def label_degree_vectors(
+    site_graphs: list[LabeledGraph], n_labels: int, v_pad: int
+) -> np.ndarray:
+    """Per-(site, label, direction) matching-edge counts by node.
+
+    ``deg[s, l, d, v]`` is the number of site ``s``'s edges with label
+    ``l`` incident to node ``v`` in direction ``d`` (0 = FWD counts at
+    the source endpoint, 1 = INV at the destination).  Automaton-
+    independent: any symbol set's §4.2.2 response-degree vector is a row
+    sum over these (a wildcard sums every label — each edge has exactly
+    one label, so the sum IS the all-edges count).
+    """
+    deg = np.zeros((len(site_graphs), n_labels, 2, v_pad), np.float32)
+    for s, g in enumerate(site_graphs):
+        np.add.at(deg[s, :, 0], (g.lbl, g.src), 1.0)
+        np.add.at(deg[s, :, 1], (g.lbl, g.dst), 1.0)
+    return deg
+
+
+class GraphPlanStore:
+    """LRU cache of Stage-A artifacts, keyed by (kind, graph identity,
+    graph-stats epoch, block size).
+
+    Graph identity is the *object*: the store pins a reference to the
+    placement/graph it staged (so ``id()`` stays unambiguous for the
+    entry's lifetime), and a service uses one store per placement.
+    Eviction and invalidation drop the store's references to staged
+    device buffers — live executors keep theirs via closure, so nothing
+    in flight breaks; the buffers free when the last executor holding
+    them is released (see :class:`repro.serve.plancache.ExecutorCache`).
+    """
+
+    def __init__(self, maxsize: int = 16):
+        self.maxsize = maxsize
+        # key -> (anchor object, artifact, epoch); anchor pins the
+        # id()-keyed source, epoch is recorded explicitly so invalidation
+        # never depends on a key-tuple layout
+        self._lru: OrderedDict[Hashable, tuple[Any, Any, int]] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # -- core get-or-build --------------------------------------------------
+
+    def _get(
+        self, key: Hashable, anchor: Any, epoch: int, build: Callable[[], Any]
+    ) -> Any:
+        if key in self._lru:
+            self._lru.move_to_end(key)
+            self.hits += 1
+            return self._lru[key][1]
+        self.misses += 1
+        value = build()
+        self._lru[key] = (anchor, value, epoch)
+        while len(self._lru) > self.maxsize:
+            self._lru.popitem(last=False)
+            self.evictions += 1
+        return value
+
+    # -- Stage-A artifacts --------------------------------------------------
+
+    def staged_graph(
+        self, graph: LabeledGraph, block_size: int = 128, epoch: int = 0
+    ) -> fops.StagedGraph:
+        """The global fused backend's staged tile tensor + offsets."""
+        key = ("staged_graph", id(graph), epoch, block_size)
+        return self._get(key, graph, epoch, lambda: fops.stage_graph(graph, block_size))
+
+    def local_graphs(self, placement: Placement, epoch: int = 0) -> list[LabeledGraph]:
+        """Per-site site-local graph views of the placement."""
+        key = ("local_graphs", id(placement), epoch)
+        return self._get(
+            key,
+            placement,
+            epoch,
+            lambda: [placement.local_graph(s) for s in range(placement.n_sites)],
+        )
+
+    def staged_sharded(
+        self, placement: Placement, block_size: int = 128, epoch: int = 0
+    ) -> fops.StagedShardedGraph:
+        """The sharded fused backend's per-site staged tile slabs."""
+        key = ("staged_sharded", id(placement), epoch, block_size)
+        return self._get(
+            key,
+            placement,
+            epoch,
+            lambda: fops.stage_sharded_graph(
+                self.local_graphs(placement, epoch), block_size
+            ),
+        )
+
+    def site_device_arrays(
+        self, placement: Placement, epoch: int = 0
+    ) -> dict[str, jnp.ndarray]:
+        """The placement's padded per-site edge arrays, staged on device
+        (the ``reference`` S2 executor's and S1's gather operands)."""
+        key = ("site_arrays", id(placement), epoch)
+        return self._get(
+            key,
+            placement,
+            epoch,
+            lambda: {
+                k: jnp.asarray(v) for k, v in placement.padded_device_arrays().items()
+            },
+        )
+
+    def label_degrees(
+        self,
+        anchor: Placement | LabeledGraph,
+        site_graphs: list[LabeledGraph],
+        n_labels: int,
+        v_pad: int,
+        epoch: int = 0,
+    ) -> np.ndarray:
+        """Per-(site, label, direction) degree vectors (§4.2.2 meter
+        inputs); ``anchor`` identifies the placement/graph the site list
+        came from."""
+        key = ("label_degrees", id(anchor), epoch, v_pad)
+        return self._get(
+            key, anchor, epoch,
+            lambda: label_degree_vectors(site_graphs, n_labels, v_pad),
+        )
+
+    # -- invalidation -------------------------------------------------------
+
+    def invalidate_epoch(self, keep_epoch: int) -> int:
+        """Drop every entry not built for ``keep_epoch`` (the graph-stats
+        epoch bump: Stage A invalidates exactly once, here).  Returns the
+        number of entries dropped.  References held by already-built
+        executors stay valid — only the store's own refs are released."""
+        stale = [k for k, (_, _, ep) in self._lru.items() if ep != keep_epoch]
+        for k in stale:
+            del self._lru[k]
+        self.evictions += len(stale)
+        return len(stale)
+
+    def clear(self) -> None:
+        self.evictions += len(self._lru)
+        self._lru.clear()
+
+    # -- reporting ----------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "size": len(self._lru),
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hit_rate,
+            "evictions": self.evictions,
+        }
+
+
+__all__ = ["GraphPlanStore", "label_degree_vectors"]

@@ -417,6 +417,8 @@ def make_s2_step_fn(
     block_size: int = 128,
     interpret: bool | None = None,
     placement: Placement | None = None,
+    plan_store=None,
+    stats_epoch: int = 0,
 ):
     """Build the jitted batched S2 executor.
 
@@ -463,15 +465,24 @@ def make_s2_step_fn(
     meters deduplicate broadcasts by (symbol-set, node) — the §4.2.2
     cache key — so they agree with the host meter even when distinct
     states share a symbol set.
+
+    Executor builds are **two-stage** (see :mod:`repro.core.plans`):
+    pass ``plan_store`` (a :class:`~repro.core.plans.GraphPlanStore`)
+    and the fused backends fetch their Stage-A artifacts — staged tile
+    tensors, site-local graphs, degree vectors — from the store keyed by
+    ``stats_epoch``, so only the cheap automaton-dependent Stage-B
+    schedule is built here.  Without a store each build stages its own
+    artifacts (the pre-refactor behavior, right for one-off callers).
     """
     if backend == "frontier_kernel":
         return _make_frontier_step_fn(
-            ca, n_nodes, max_levels, graph, replication_factor, block_size, interpret
+            ca, n_nodes, max_levels, graph, replication_factor, block_size,
+            interpret, plan_store, stats_epoch,
         )
     if backend == "frontier_kernel_sharded":
         return _make_frontier_sharded_step_fn(
             ca, n_nodes, mesh, site_axes, batch_axis, max_levels, placement,
-            block_size, interpret,
+            block_size, interpret, plan_store, stats_epoch,
         )
     if backend != "reference":
         raise ValueError(
@@ -608,11 +619,16 @@ def _make_frontier_step_fn(
     replication_factor: float,
     block_size: int,
     interpret: bool | None,
+    plan_store=None,
+    stats_epoch: int = 0,
 ):
     """The fused-Pallas S2 executor (``backend="frontier_kernel"``).
 
-    Pre-stages the global graph's block-sparse tiles and the automaton's
-    fused level schedule once at build time; each call stacks the start
+    Stage A (the global graph's staged block-sparse tile tensor and the
+    per-label degree vectors) comes from ``plan_store`` when one is
+    passed — shared across every automaton signature — and is staged
+    locally otherwise; only the cheap automaton-dependent Stage-B level
+    schedule is built per executor.  Each call stacks the start
     batch into chunks of ``QPAD`` (=8) queries riding the f32 row-tile
     minimum, and runs one device-resident fixpoint per chunk — one
     ``pallas_call`` per BFS level regardless of |transitions| × |labels|,
@@ -639,8 +655,12 @@ def _make_frontier_step_fn(
         raise ValueError(f"graph has {graph.n_nodes} nodes, executor built for {n_nodes}")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    bg = fops.make_blocked_graph(graph, block_size)
-    plan = fops.build_level_plan(ca, bg)
+    staged = (
+        plan_store.staged_graph(graph, block_size, epoch=stats_epoch)
+        if plan_store is not None
+        else fops.stage_graph(graph, block_size)
+    )
+    plan = fops.build_level_schedule(ca, staged)
     n_states, q_pad, v_pad = ca.n_states, plan.q_pad, plan.v_pad
     levels = max_levels if max_levels is not None else n_states * n_nodes
 
@@ -648,7 +668,12 @@ def _make_frontier_step_fn(
     n_groups = max(len(sgroups), 1)
     # matching-edge counts per node for each group's symbol set: the
     # unicast response size of one broadcast at that node (§4.2.2)
-    deg, payloads = _site_symbol_degrees(sgroups, [graph], v_pad)
+    label_deg = (
+        plan_store.label_degrees(graph, [graph], graph.n_labels, v_pad, epoch=stats_epoch)
+        if plan_store is not None
+        else None
+    )
+    deg, payloads = _site_symbol_degrees(sgroups, [graph], v_pad, label_deg)
     deg_c = jnp.asarray(deg[0])
     pay_c = jnp.asarray(payloads)
     state_rows = [jnp.asarray(states, jnp.int32) for _, states in sgroups]
@@ -723,7 +748,7 @@ def _make_frontier_step_fn(
 
 
 def _site_symbol_degrees(
-    sgroups, site_graphs, v_pad: int
+    sgroups, site_graphs, v_pad: int, label_deg: np.ndarray | None = None
 ) -> tuple[np.ndarray, np.ndarray]:
     """Per-site, per-symbol-set-group matching-edge counts by node.
 
@@ -732,12 +757,26 @@ def _site_symbol_degrees(
     to node ``v`` — the unicast response size site ``s`` contributes to
     one broadcast at ``v`` (§4.2.2).  ``payloads[g]`` is the broadcast
     payload 1 + |symset|.
+
+    ``label_deg`` accepts the Stage-A per-(site, label, direction)
+    vectors from :func:`repro.core.plans.label_degree_vectors`: the
+    automaton-dependent group vectors then reduce to row sums (a
+    wildcard sums every label — each edge has exactly one label), so
+    warm executor builds skip the per-edge ``np.add.at`` scans.
     """
     n_groups = max(len(sgroups), 1)
     deg = np.zeros((len(site_graphs), n_groups, v_pad), np.float32)
     payloads = np.zeros(n_groups, np.float32)
     for gi, (symset, _) in enumerate(sgroups):
         payloads[gi] = 1 + len(symset)
+        if label_deg is not None:
+            for lid, dirn in symset:
+                d = 0 if dirn == FWD else 1
+                if lid < 0:
+                    deg[:, gi] += label_deg[:, :, d].sum(axis=1)
+                else:
+                    deg[:, gi] += label_deg[:, lid, d]
+            continue
         for s, g_s in enumerate(site_graphs):
             for lid, dirn in symset:
                 sel = slice(None) if lid < 0 else g_s.lbl == lid
@@ -756,9 +795,16 @@ def _make_frontier_sharded_step_fn(
     placement: Placement | None,
     block_size: int,
     interpret: bool | None,
+    plan_store=None,
+    stats_epoch: int = 0,
 ):
     """The site-sharded fused-Pallas S2 executor
     (``backend="frontier_kernel_sharded"``).
+
+    Stage A — the per-site staged tile slabs, site-local graph views,
+    and per-label degree vectors (n_sites packings per build without
+    sharing!) — comes from ``plan_store`` when one is passed; only the
+    automaton-dependent Stage-B schedule is built per executor.
 
     Honors the paper's distribution model on the fused kernel path: each
     site's block-sparse tiles come from *its own* edge partition
@@ -808,14 +854,26 @@ def _make_frontier_sharded_step_fn(
         )
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    site_graphs = [placement.local_graph(s) for s in range(placement.n_sites)]
-    plan = fops.build_sharded_level_plan(ca, site_graphs, block_size)
+    if plan_store is not None:
+        site_graphs = plan_store.local_graphs(placement, epoch=stats_epoch)
+        staged = plan_store.staged_sharded(placement, block_size, epoch=stats_epoch)
+    else:
+        site_graphs = [placement.local_graph(s) for s in range(placement.n_sites)]
+        staged = fops.stage_sharded_graph(site_graphs, block_size)
+    plan = fops.build_sharded_level_schedule(ca, staged)
     n_states, q_pad, v_pad = ca.n_states, plan.q_pad, plan.v_pad
     levels = max_levels if max_levels is not None else n_states * n_nodes
 
     sgroups = symbol_set_groups(ca)
     n_groups = max(len(sgroups), 1)
-    deg, payloads = _site_symbol_degrees(sgroups, site_graphs, v_pad)
+    label_deg = (
+        plan_store.label_degrees(
+            placement, site_graphs, placement.graph.n_labels, v_pad, epoch=stats_epoch
+        )
+        if plan_store is not None
+        else None
+    )
+    deg, payloads = _site_symbol_degrees(sgroups, site_graphs, v_pad, label_deg)
     deg_c = jnp.asarray(deg)
     pay_c = jnp.asarray(payloads)
     state_rows = [jnp.asarray(states, jnp.int32) for _, states in sgroups]
@@ -949,6 +1007,8 @@ def s2_execute(
     backend: str = "reference",
     block_size: int = 128,
     interpret: bool | None = None,
+    plan_store=None,
+    stats_epoch: int = 0,
 ) -> tuple[np.ndarray, list[StrategyCost]]:
     """Run the batched S2 executor for ``start_nodes``.
 
@@ -971,6 +1031,12 @@ def s2_execute(
     the per-site response breakdown — which lands on each cost's
     ``site_unicast_symbols`` (true per-site §4.2 retrieval counts; their
     sum is the K-weighted total the other backends approximate).
+
+    ``plan_store`` (a :class:`~repro.core.plans.GraphPlanStore`) routes
+    every graph-dependent artifact through the shared Stage-A cache: the
+    reference backend's padded site arrays here, and — when ``step_fn``
+    is not prebuilt — the fused backends' staged tiles inside
+    :func:`make_s2_step_fn`.
     """
     if device_arrays is not None:
         arrays = device_arrays
@@ -981,6 +1047,8 @@ def s2_execute(
             k: np.zeros((1, 1), bool if k == "mask" else np.int32)
             for k in ("src", "lbl", "dst", "mask")
         }
+    elif plan_store is not None:
+        arrays = plan_store.site_device_arrays(placement, epoch=stats_epoch)
     else:
         arrays = placement.padded_device_arrays()
     if step_fn is None:
@@ -989,6 +1057,7 @@ def s2_execute(
             backend=backend, graph=placement.graph,
             replication_factor=placement.replication_factor,
             block_size=block_size, interpret=interpret, placement=placement,
+            plan_store=plan_store, stats_epoch=stats_epoch,
         )
     out = step_fn(
         jnp.asarray(arrays["src"]),

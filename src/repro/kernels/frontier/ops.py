@@ -1,7 +1,23 @@
 """jit'd wrappers: PAA levels and fixpoints on the Pallas frontier kernels.
 
-``make_blocked_graph`` packs every label's adjacency into block-sparse
-tiles once per graph.  Three execution paths share it:
+Compilation is **two-stage** (the paper's §4 planner separation between
+what depends on the data distribution and what depends on the query):
+
+* **Stage A — graph-dependent, automaton-independent.**
+  ``make_blocked_graph`` packs every label's adjacency into block-sparse
+  tiles; :func:`stage_graph` concatenates all label stores into ONE
+  device tile tensor plus per-(direction, label) offset tables, and
+  :func:`stage_sharded_graph` does the same per site (padded to a common
+  tile count).  Built once per (graph, block_size) — shared by every
+  automaton signature (see :class:`repro.core.plans.GraphPlanStore`).
+
+* **Stage B — automaton-dependent, cheap.**
+  :func:`build_level_schedule` / :func:`build_sharded_level_schedule`
+  only compute grid ordering and the scalar-prefetch id arrays over the
+  Stage-A offsets — zero tile packing, zero tile-tensor transfers; the
+  returned plans *alias* the staged tile tensor.
+
+Three execution paths share the staged tiles:
 
 * **Fused (default)** — ``build_level_plan`` concatenates every
   (transition, label) tile list of a compiled automaton into one grid
@@ -29,6 +45,7 @@ code JITs to MXU tile products.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from functools import partial
 
@@ -46,6 +63,16 @@ from repro.kernels.frontier.ref import pack_blocks
 # stack up to QPAD independent queries' frontiers per automaton state.
 QPAD = 8
 
+# Build-path instrumentation: every Stage-A packing/staging op and every
+# Stage-B schedule construction bumps a counter, so tests and
+# ``benchmarks/plan_store.py`` can assert that warm executor builds pack
+# ZERO tiles (the two-stage compilation contract).
+BUILD_COUNTERS: collections.Counter = collections.Counter()
+
+
+def reset_build_counters() -> None:
+    BUILD_COUNTERS.clear()
+
 
 @dataclasses.dataclass
 class BlockedGraph:
@@ -58,17 +85,162 @@ class BlockedGraph:
 
 
 def make_blocked_graph(graph: LabeledGraph, block_size: int = 128) -> BlockedGraph:
+    BUILD_COUNTERS["make_blocked_graph"] += 1
     fwd, inv = {}, {}
     for lid in range(graph.n_labels):
         src, dst = graph.edges_with_label(lid)
         if len(src) == 0:
             continue
+        BUILD_COUNTERS["pack_blocks"] += 2
         t, r, c, v_pad = pack_blocks(src, dst, graph.n_nodes, block_size)
         fwd[lid] = (jnp.asarray(t), jnp.asarray(r), jnp.asarray(c))
         t, r, c, _ = pack_blocks(dst, src, graph.n_nodes, block_size)
         inv[lid] = (jnp.asarray(t), jnp.asarray(r), jnp.asarray(c))
     v_pad = -(-graph.n_nodes // block_size) * block_size
     return BlockedGraph(graph.n_nodes, v_pad, block_size, fwd, inv)
+
+
+# ---------------------------------------------------------------------------
+# Stage A: staged tile tensors (graph-dependent, automaton-independent)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StagedGraph:
+    """Stage-A artifact: every label store's tiles in ONE device tensor.
+
+    ``tiles[0]`` is the all-zero cover tile; ``offsets[(direction,
+    label_id)] = (base, block_rows, block_cols)`` says where that label
+    store's tiles start and which (row, col) block each occupies.
+    Automaton-independent: any number of Stage-B schedules
+    (:func:`build_level_schedule`) index into one staged tensor without
+    re-packing or re-transferring tiles."""
+
+    n_nodes: int
+    v_pad: int
+    block_size: int
+    tiles: jnp.ndarray  # (1 + sum nnz, B, B) f32; index 0 = zero cover tile
+    offsets: dict[tuple[int, int], tuple[int, np.ndarray, np.ndarray]]
+
+
+def _label_tile_lists(
+    source: LabeledGraph | BlockedGraph, block_size: int
+) -> tuple[int, int, dict[tuple[int, int], tuple[np.ndarray, np.ndarray, np.ndarray]]]:
+    """Host tile lists per (direction, label): from a raw graph (packing
+    directly to numpy, no per-label device arrays) or an existing
+    :class:`BlockedGraph` (pulling its tiles back to host once)."""
+    if isinstance(source, BlockedGraph):
+        stores = {}
+        for direction, store in ((FWD, source.fwd), (INV, source.inv)):
+            for lid, (t, r, c) in store.items():
+                stores[(direction, lid)] = (np.asarray(t), np.asarray(r), np.asarray(c))
+        return source.n_nodes, source.v_pad, stores
+    g = source
+    stores = {}
+    for lid in range(g.n_labels):
+        src, dst = g.edges_with_label(lid)
+        if len(src) == 0:
+            continue
+        BUILD_COUNTERS["pack_blocks"] += 2
+        t, r, c, _ = pack_blocks(src, dst, g.n_nodes, block_size)
+        stores[(FWD, lid)] = (t, r, c)
+        t, r, c, _ = pack_blocks(dst, src, g.n_nodes, block_size)
+        stores[(INV, lid)] = (t, r, c)
+    v_pad = -(-g.n_nodes // block_size) * block_size
+    return g.n_nodes, v_pad, stores
+
+
+def _concat_stores(
+    stores: dict[tuple[int, int], tuple[np.ndarray, np.ndarray, np.ndarray]],
+    block_size: int,
+) -> tuple[np.ndarray, dict[tuple[int, int], tuple[int, np.ndarray, np.ndarray]]]:
+    """Concatenate label stores behind the zero cover tile (index 0) and
+    record each store's base offset + block coordinates — the staging
+    layout shared by the global and per-site Stage-A builders."""
+    tile_arrays = [np.zeros((1, block_size, block_size), np.float32)]
+    offsets: dict[tuple[int, int], tuple[int, np.ndarray, np.ndarray]] = {}
+    off = 1
+    for key in sorted(stores):
+        t, r, c = stores[key]
+        tile_arrays.append(t)
+        offsets[key] = (off, r, c)
+        off += int(t.shape[0])
+    return np.concatenate(tile_arrays, axis=0), offsets
+
+
+def stage_graph(
+    source: LabeledGraph | BlockedGraph, block_size: int = 128
+) -> StagedGraph:
+    """Stage A for the global fused backend: pack (if needed) and
+    concatenate every label's tiles into one device tensor + offsets."""
+    BUILD_COUNTERS["stage_graph"] += 1
+    n_nodes, v_pad, stores = _label_tile_lists(source, block_size)
+    tiles, offsets = _concat_stores(stores, block_size)
+    return StagedGraph(
+        n_nodes=n_nodes,
+        v_pad=v_pad,
+        block_size=block_size,
+        tiles=jnp.asarray(tiles),
+        offsets=offsets,
+    )
+
+
+@dataclasses.dataclass
+class StagedShardedGraph:
+    """Stage A for the site-sharded backend: per-site staged tile
+    tensors padded to ONE common tile count and stacked (leading
+    ``n_sites`` dim, laid out for ``shard_map(in_specs=P(site_axes,
+    ...))``).  Padding tiles are all-zero and unreferenced.  Per-site
+    offset tables index into that site's slab; Stage-B schedules
+    (:func:`build_sharded_level_schedule`) share one staged stack across
+    every automaton signature."""
+
+    n_sites: int
+    n_nodes: int
+    v_pad: int
+    block_size: int
+    n_tiles: int  # common (padded) per-site tile count
+    tiles: jnp.ndarray  # (n_sites, n_tiles, B, B) f32; index 0 = zero tile
+    site_offsets: tuple[dict[tuple[int, int], tuple[int, np.ndarray, np.ndarray]], ...]
+
+
+def stage_sharded_graph(
+    site_graphs: list[LabeledGraph], block_size: int = 128
+) -> StagedShardedGraph:
+    """Stage A per site: each site's tile lists come from *its own* edge
+    partition (replication included); all slabs pad to the max tile
+    count so one jitted program serves every site.
+
+    Every site graph must share ``n_nodes`` (the global node id space) so
+    all sites agree on ``v_pad`` and block indexing; a site holding zero
+    edges (or none for some label) contributes only the zero cover tile.
+    """
+    if not site_graphs:
+        raise ValueError("need at least one site graph")
+    n_nodes = site_graphs[0].n_nodes
+    if any(g.n_nodes != n_nodes for g in site_graphs):
+        raise ValueError("site graphs must share the global node id space")
+    BUILD_COUNTERS["stage_sharded_graph"] += 1
+    per_site = []
+    for g in site_graphs:
+        _, _, stores = _label_tile_lists(g, block_size)
+        per_site.append(_concat_stores(stores, block_size))
+    n_tiles = max(t.shape[0] for t, _ in per_site)
+    stacked = np.zeros(
+        (len(site_graphs), n_tiles, block_size, block_size), np.float32
+    )
+    for s, (t, _) in enumerate(per_site):
+        stacked[s, : t.shape[0]] = t
+    v_pad = -(-n_nodes // block_size) * block_size
+    return StagedShardedGraph(
+        n_sites=len(site_graphs),
+        n_nodes=n_nodes,
+        v_pad=v_pad,
+        block_size=block_size,
+        n_tiles=n_tiles,
+        tiles=jnp.asarray(stacked),
+        site_offsets=tuple(offsets for _, offsets in per_site),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -102,28 +274,23 @@ class FusedLevelPlan:
     o_cols: jnp.ndarray  # (n_steps,) int32: tile block col
 
 
-def build_level_plan(
-    ca: CompiledAutomaton, bg: BlockedGraph, q_pad: int = QPAD
-) -> FusedLevelPlan:
-    """Schedule one fused BFS level for ``ca`` over ``bg``.
-
-    Wildcard transitions expand to every label's tile list of their
-    direction; labels with empty stores (no edges) contribute nothing.
-    """
-    nb = bg.v_pad // bg.block_size
-    tile_arrays = [np.zeros((1, bg.block_size, bg.block_size), np.float32)]
-    offsets: dict[tuple[int, int], tuple[int, np.ndarray, np.ndarray]] = {}
-    off = 1
-    for direction, store in ((FWD, bg.fwd), (INV, bg.inv)):
-        for lid, (t, r, c) in store.items():
-            tile_arrays.append(np.asarray(t))
-            offsets[(direction, lid)] = (off, np.asarray(r), np.asarray(c))
-            off += int(np.asarray(t).shape[0])
-
+def _schedule_steps(
+    ca: CompiledAutomaton,
+    offsets: dict[tuple[int, int], tuple[int, np.ndarray, np.ndarray]],
+    nb: int,
+) -> tuple[np.ndarray, np.ndarray, int]:
+    """Stage-B core: the sorted (orow, ocol, frow, fcol, tid) step table
+    for one automaton over one staged offset map, plus ``firsts`` and the
+    real-step count.  Pure host indexing — no tile packing."""
+    fwd_lids = sorted(lid for (d, lid) in offsets if d == FWD)
+    inv_lids = sorted(lid for (d, lid) in offsets if d == INV)
     steps: list[tuple[int, int, int, int, int]] = []  # (orow, ocol, frow, fcol, tid)
     for t in ca.transitions:
-        store = bg.fwd if t.direction == FWD else bg.inv
-        lids = [t.label_id] if t.label_id >= 0 else list(store.keys())
+        lids = (
+            [t.label_id]
+            if t.label_id >= 0
+            else (fwd_lids if t.direction == FWD else inv_lids)
+        )
         for lid in lids:
             ent = offsets.get((t.direction, lid))
             if ent is None:
@@ -145,14 +312,28 @@ def build_level_plan(
     if len(steps) > 1:
         same = (arr[1:, 0] == arr[:-1, 0]) & (arr[1:, 1] == arr[:-1, 1])
         firsts[1:][same] = 0
+    return arr, firsts, n_real
+
+
+def build_level_schedule(
+    ca: CompiledAutomaton, staged: StagedGraph, q_pad: int = QPAD
+) -> FusedLevelPlan:
+    """Stage B: schedule one fused BFS level for ``ca`` over Stage-A
+    artifacts.  Wildcard transitions expand to every label's tile list of
+    their direction; labels with empty stores (no edges) contribute
+    nothing.  The returned plan *aliases* ``staged.tiles`` — zero tile
+    packing, zero device transfers of tile data."""
+    BUILD_COUNTERS["level_schedule"] += 1
+    nb = staged.v_pad // staged.block_size
+    arr, firsts, n_real = _schedule_steps(ca, staged.offsets, nb)
     return FusedLevelPlan(
         n_states=ca.n_states,
-        n_nodes=bg.n_nodes,
-        v_pad=bg.v_pad,
-        block_size=bg.block_size,
+        n_nodes=staged.n_nodes,
+        v_pad=staged.v_pad,
+        block_size=staged.block_size,
         q_pad=q_pad,
         n_real_steps=n_real,
-        tiles=jnp.asarray(np.concatenate(tile_arrays, axis=0)),
+        tiles=staged.tiles,
         firsts=jnp.asarray(firsts),
         tile_ids=jnp.asarray(arr[:, 4]),
         f_rows=jnp.asarray(arr[:, 2]),
@@ -160,6 +341,21 @@ def build_level_plan(
         o_rows=jnp.asarray(arr[:, 0]),
         o_cols=jnp.asarray(arr[:, 1]),
     )
+
+
+def build_level_plan(
+    ca: CompiledAutomaton,
+    bg: BlockedGraph | StagedGraph,
+    q_pad: int = QPAD,
+) -> FusedLevelPlan:
+    """One-shot wrapper: stage (Stage A) then schedule (Stage B).
+
+    Pass a :class:`StagedGraph` (e.g. from
+    :class:`repro.core.plans.GraphPlanStore`) to skip straight to Stage
+    B; a :class:`BlockedGraph` is staged here — the pre-refactor
+    single-stage behavior, kept for standalone/one-off callers."""
+    staged = bg if isinstance(bg, StagedGraph) else stage_graph(bg, bg.block_size)
+    return build_level_schedule(ca, staged, q_pad)
 
 
 # ---------------------------------------------------------------------------
@@ -172,10 +368,11 @@ class ShardedLevelPlan:
     """Per-site fused level schedules padded to ONE common grid shape.
 
     Site ``s`` holds an arbitrary edge partition; its tile lists are built
-    from *its* edges only (:func:`build_level_plan` on the site-local
-    graph), then every site's schedule is padded to the max step/tile
-    counts so a single jitted program — one ``pallas_call`` per site per
-    level — serves all sites under ``shard_map`` over the site axis.
+    from *its* edges only (:func:`stage_sharded_graph` on the site-local
+    graphs, Stage A) and scheduled per automaton (Stage B), with every
+    site's schedule padded to the max step/tile counts so a single jitted
+    program — one ``pallas_call`` per site per level — serves all sites
+    under ``shard_map`` over the site axis.
 
     Padding steps multiply the all-zero cover tile into the *last* output
     block with ``firsts=0``: they keep the (o_row, o_col) sort order, hit
@@ -204,60 +401,47 @@ class ShardedLevelPlan:
     o_cols: jnp.ndarray  # (n_sites, n_steps) int32
 
 
-def build_sharded_level_plan(
-    ca: CompiledAutomaton,
-    site_graphs: list[LabeledGraph],
-    block_size: int = 128,
-    q_pad: int = QPAD,
+def build_sharded_level_schedule(
+    ca: CompiledAutomaton, staged: StagedShardedGraph, q_pad: int = QPAD
 ) -> ShardedLevelPlan:
-    """Schedule one fused BFS level *per site* over each site's own edges.
+    """Stage B: schedule one fused BFS level *per site* over the staged
+    per-site tile slabs, padded to a common step count.
 
-    Every site graph must share ``n_nodes`` (the global node id space) so
-    all sites agree on ``v_pad`` and block indexing; a site holding zero
-    edges (or none for some label) degenerates to a cover-only schedule.
-    """
-    if not site_graphs:
-        raise ValueError("need at least one site graph")
-    n_nodes = site_graphs[0].n_nodes
-    if any(g.n_nodes != n_nodes for g in site_graphs):
-        raise ValueError("site graphs must share the global node id space")
-    plans = [
-        build_level_plan(ca, make_blocked_graph(g, block_size), q_pad)
-        for g in site_graphs
+    A site holding zero edges (or none for some label) degenerates to a
+    cover-only schedule.  The returned plan *aliases* ``staged.tiles`` —
+    the per-site packing and device transfer happened once in Stage A
+    (:func:`stage_sharded_graph`), so a new automaton signature on a hot
+    graph costs only this host-side step indexing."""
+    BUILD_COUNTERS["sharded_level_schedule"] += 1
+    nb = staged.v_pad // staged.block_size
+    site_steps = [
+        _schedule_steps(ca, offsets, nb) for offsets in staged.site_offsets
     ]
-    nb = plans[0].v_pad // block_size
-    n_steps = max(int(p.tile_ids.shape[0]) for p in plans)
-    n_tiles = max(int(p.tiles.shape[0]) for p in plans)
+    n_steps = max(arr.shape[0] for arr, _, _ in site_steps)
 
     def pad_steps(arr: np.ndarray, fill: int) -> np.ndarray:
         return np.concatenate(
             [arr, np.full(n_steps - len(arr), fill, np.int32)]
         )
 
-    tiles, firsts, tids, frows, fcols, orows, ocols = [], [], [], [], [], [], []
-    for p in plans:
-        t = np.asarray(p.tiles)
-        tiles.append(
-            np.concatenate(
-                [t, np.zeros((n_tiles - t.shape[0], block_size, block_size), np.float32)]
-            )
-        )
-        firsts.append(pad_steps(np.asarray(p.firsts), 0))
-        tids.append(pad_steps(np.asarray(p.tile_ids), 0))  # zero cover tile
-        frows.append(pad_steps(np.asarray(p.f_rows), 0))
-        fcols.append(pad_steps(np.asarray(p.f_cols), 0))
-        orows.append(pad_steps(np.asarray(p.o_rows), ca.n_states - 1))
-        ocols.append(pad_steps(np.asarray(p.o_cols), nb - 1))
+    firsts, tids, frows, fcols, orows, ocols = [], [], [], [], [], []
+    for arr, f, _ in site_steps:
+        firsts.append(pad_steps(f, 0))
+        tids.append(pad_steps(arr[:, 4], 0))  # zero cover tile
+        frows.append(pad_steps(arr[:, 2], 0))
+        fcols.append(pad_steps(arr[:, 3], 0))
+        orows.append(pad_steps(arr[:, 0], ca.n_states - 1))
+        ocols.append(pad_steps(arr[:, 1], nb - 1))
     return ShardedLevelPlan(
-        n_sites=len(site_graphs),
+        n_sites=staged.n_sites,
         n_states=ca.n_states,
-        n_nodes=n_nodes,
-        v_pad=plans[0].v_pad,
-        block_size=block_size,
+        n_nodes=staged.n_nodes,
+        v_pad=staged.v_pad,
+        block_size=staged.block_size,
         q_pad=q_pad,
         n_steps=n_steps,
-        n_real_steps=tuple(p.n_real_steps for p in plans),
-        tiles=jnp.asarray(np.stack(tiles)),
+        n_real_steps=tuple(n_real for _, _, n_real in site_steps),
+        tiles=staged.tiles,
         firsts=jnp.asarray(np.stack(firsts)),
         tile_ids=jnp.asarray(np.stack(tids)),
         f_rows=jnp.asarray(np.stack(frows)),
@@ -265,6 +449,24 @@ def build_sharded_level_plan(
         o_rows=jnp.asarray(np.stack(orows)),
         o_cols=jnp.asarray(np.stack(ocols)),
     )
+
+
+def build_sharded_level_plan(
+    ca: CompiledAutomaton,
+    site_graphs: list[LabeledGraph] | StagedShardedGraph,
+    block_size: int = 128,
+    q_pad: int = QPAD,
+) -> ShardedLevelPlan:
+    """One-shot wrapper: stage every site (Stage A) then schedule (Stage
+    B).  Pass a :class:`StagedShardedGraph` to skip straight to Stage B —
+    that is what :class:`repro.core.plans.GraphPlanStore` hands the
+    sharded executor builder, making warm builds pack zero tiles."""
+    staged = (
+        site_graphs
+        if isinstance(site_graphs, StagedShardedGraph)
+        else stage_sharded_graph(site_graphs, block_size)
+    )
+    return build_sharded_level_schedule(ca, staged, q_pad)
 
 
 @partial(jax.jit, static_argnames=("block_size", "q_pad", "interpret"))

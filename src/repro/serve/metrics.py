@@ -3,7 +3,9 @@
 Dumb by design — the service records one :class:`QueryRecord` per request
 and :meth:`ServiceMetrics.summary` reduces them into the stable schema the
 throughput benchmark serializes (queries/sec, p50/p95 latency, cache hit
-rates, per-strategy counts, symbol totals).
+rates, per-strategy counts, symbol totals, plus the two-stage-compilation
+counters: executor-cache and plan-store hit/miss rates pushed by the
+service via :meth:`ServiceMetrics.set_cache_stats` each flush).
 """
 
 from __future__ import annotations
@@ -27,11 +29,40 @@ class QueryRecord:
     exec_batch_size: int  # padded batch the request rode in (S2), or 1
 
 
+def _empty_exec_cache_stats() -> dict:
+    return {"size": 0, "graphs": 0, "hits": 0, "misses": 0, "hit_rate": 0.0,
+            "builds": 0, "releases": 0}
+
+
+def _empty_plan_store_stats() -> dict:
+    return {"size": 0, "hits": 0, "misses": 0, "hit_rate": 0.0, "evictions": 0}
+
+
 class ServiceMetrics:
     def __init__(self) -> None:
         self.records: list[QueryRecord] = []
         self._t0: float | None = None
         self._t_last: float | None = None
+        # executor-cache / plan-store counters: part of the STABLE summary
+        # schema — the zeroed placeholders carry the full key sets of
+        # ExecutorCache.stats() / GraphPlanStore.stats(), so consumers see
+        # one schema whether or not the service has pushed real numbers
+        # via set_cache_stats yet
+        self._cache_stats: dict[str, dict] = {
+            "exec_cache": _empty_exec_cache_stats(),
+            "plan_store": _empty_plan_store_stats(),
+        }
+
+    def set_cache_stats(
+        self, exec_cache: dict | None = None, plan_store: dict | None = None
+    ) -> None:
+        """Install the current executor-cache / plan-store hit/miss
+        counters (the service pushes these every flush, so summaries and
+        the throughput benchmark see live two-stage-compilation rates)."""
+        if exec_cache is not None:
+            self._cache_stats["exec_cache"] = dict(exec_cache)
+        if plan_store is not None:
+            self._cache_stats["plan_store"] = dict(plan_store)
 
     def record(self, rec: QueryRecord) -> None:
         now = time.perf_counter()
@@ -64,6 +95,8 @@ class ServiceMetrics:
             "total_broadcast_symbols": float(sum(r.broadcast_symbols for r in self.records)),
             "total_unicast_symbols": float(sum(r.unicast_symbols for r in self.records)),
             "strategies": strategies,
+            "exec_cache": dict(self._cache_stats["exec_cache"]),
+            "plan_store": dict(self._cache_stats["plan_store"]),
         }
         if extra:
             out.update(extra)

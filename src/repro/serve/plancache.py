@@ -13,12 +13,18 @@ query's life:
   invalidates every entry implicitly when the service refits its
   statistical model on fresh sample data.
 
-* :class:`ExecutorCache` — LRU over the *automaton signature* (fused
-  transition runs + start/accepting states + n_nodes + mesh) → the
-  jitted batched S2 step function from
-  :func:`repro.core.strategies.make_s2_step_fn`.  Distinct queries that
-  ground to the same automaton structure share one compiled executor, so
-  each query class jits exactly once (per start-batch bucket).
+* :class:`ExecutorCache` — a TWO-LEVEL LRU mirroring two-stage
+  compilation (see :mod:`repro.core.plans`): the outer key is the
+  *graph key* ``(stats epoch, placement/graph identity, backend, block
+  size)`` — everything Stage A depends on — and the inner key is the
+  *automaton signature* (fused transition runs + start/accepting states
+  + n_nodes + mesh).  Builds route Stage A through the cache's shared
+  :class:`~repro.core.plans.GraphPlanStore`, so distinct signatures on
+  one hot graph share staged tiles (zero tile packing on warm builds)
+  and each query class jits exactly once (per start-batch bucket).
+  Eviction releases the jitted step fn's compilation cache — the staged
+  device buffers baked into it free once the plan store's Stage-A entry
+  also goes (no device-buffer leak across many signatures).
 """
 
 from __future__ import annotations
@@ -29,6 +35,7 @@ from typing import Any, Callable, Hashable
 
 from jax.sharding import Mesh
 
+from repro.core import plans as plans_mod
 from repro.core import regex as rx
 from repro.core import strategies
 from repro.core.automaton import CompiledAutomaton
@@ -239,12 +246,67 @@ def automaton_signature(
     )
 
 
-class ExecutorCache:
-    """LRU of jitted S2 step functions keyed by automaton signature."""
+@dataclasses.dataclass
+class _ExecEntry:
+    """One compiled executor: the jitted step fn + the keys it lives
+    under.  ``anchor`` pins the placement/graph whose ``id()`` is baked
+    into ``graph_key`` — without it, a garbage-collected placement could
+    hand its address to a new object and alias a stale executor.
+    ``release()`` clears the jit compilation cache (the compiled
+    executables hold the baked-in staged tile constants), so an evicted
+    signature's device buffers free as soon as the shared Stage-A entry
+    in the plan store is also dropped."""
 
-    def __init__(self, maxsize: int = 64):
-        self._lru = _LRU(maxsize)
+    graph_key: tuple
+    sig: tuple
+    fn: Callable
+    anchor: Any = None
+
+    def release(self) -> None:
+        clear = getattr(self.fn, "clear_cache", None)
+        if callable(clear):
+            clear()
+
+
+class ExecutorCache:
+    """Two-level LRU of jitted S2 step functions: graph key → automaton
+    signature (see the module docstring).  Owns (or shares) the
+    :class:`~repro.core.plans.GraphPlanStore` that Stage A of every
+    build is routed through."""
+
+    def __init__(self, maxsize: int = 64, plan_store: plans_mod.GraphPlanStore | None = None):
+        self.maxsize = maxsize
+        self.plan_store = plan_store if plan_store is not None else plans_mod.GraphPlanStore()
+        self._lru: OrderedDict[tuple, _ExecEntry] = OrderedDict()  # (graph_key, sig) →
+        self._by_graph: dict[tuple, set[tuple]] = {}  # graph_key → {sig}
+        self.hits = 0
+        self.misses = 0
         self.builds = 0
+        self.releases = 0
+
+    @staticmethod
+    def graph_key(
+        stats_epoch: int,
+        backend: str,
+        block_size: int,
+        graph: Any = None,
+        placement: Any = None,
+    ) -> tuple:
+        """Everything Stage A depends on: the graph-stats epoch, the
+        data's identity (the placement when the backend is site-aware,
+        else the global graph), and the staging parameters."""
+        anchor = placement if placement is not None else graph
+        return (stats_epoch, id(anchor) if anchor is not None else None, backend, block_size)
+
+    def _evict(self, key: tuple) -> None:
+        entry = self._lru.pop(key)
+        sigs = self._by_graph.get(entry.graph_key)
+        if sigs is not None:
+            sigs.discard(entry.sig)
+            if not sigs:
+                del self._by_graph[entry.graph_key]
+        entry.release()
+        self.releases += 1
 
     def get_or_build(
         self,
@@ -261,13 +323,15 @@ class ExecutorCache:
         block_size: int = 128,
         interpret: bool | None = None,
         placement: Any = None,
+        stats_epoch: int = 0,
     ) -> tuple[tuple, Callable]:
         """``signature`` accepts the precomputed key (the service computes
         it once per request during planning) to skip re-deriving the
         transition runs here.  The backend extras (``graph``,
         ``replication_factor``, ``block_size``, ``interpret``,
         ``placement``) are only consulted by the fused
-        ``frontier_kernel``/``frontier_kernel_sharded`` backends."""
+        ``frontier_kernel``/``frontier_kernel_sharded`` backends;
+        ``stats_epoch`` scopes the Stage-A artifacts the build reuses."""
         sig = (
             signature
             if signature is not None
@@ -275,20 +339,57 @@ class ExecutorCache:
                 ca, n_nodes, mesh, site_axes, batch_axis, max_levels, backend, block_size
             )
         )
-        fn = self._lru.get(sig)
-        if fn is None:
-            fn = strategies.make_s2_step_fn(
-                ca, n_nodes, mesh, site_axes, batch_axis, max_levels,
-                backend=backend, graph=graph, replication_factor=replication_factor,
-                block_size=block_size, interpret=interpret, placement=placement,
-            )
-            self._lru.put(sig, fn)
-            self.builds += 1
+        gkey = self.graph_key(stats_epoch, backend, block_size, graph, placement)
+        key = (gkey, sig)
+        entry = self._lru.get(key)
+        if entry is not None:
+            self._lru.move_to_end(key)
+            self.hits += 1
+            return sig, entry.fn
+        self.misses += 1
+        fn = strategies.make_s2_step_fn(
+            ca, n_nodes, mesh, site_axes, batch_axis, max_levels,
+            backend=backend, graph=graph, replication_factor=replication_factor,
+            block_size=block_size, interpret=interpret, placement=placement,
+            plan_store=self.plan_store, stats_epoch=stats_epoch,
+        )
+        self._lru[key] = _ExecEntry(
+            graph_key=gkey, sig=sig, fn=fn,
+            anchor=placement if placement is not None else graph,
+        )
+        self._by_graph.setdefault(gkey, set()).add(sig)
+        self.builds += 1
+        while len(self._lru) > self.maxsize:
+            self._evict(next(iter(self._lru)))
         return sig, fn
 
-    def stats(self) -> dict:
-        return {**self._lru.stats(), "builds": self.builds}
+    def drop_epoch(self, keep_epoch: int) -> int:
+        """Release every executor whose graph key belongs to another
+        stats epoch (graph_key[0]), and the plan store's stale Stage-A
+        entries with them — the one-shot invalidation a graph-epoch bump
+        triggers.  Executors already handed out keep working: only cache
+        references are dropped here."""
+        stale = [k for k, e in self._lru.items() if e.graph_key[0] != keep_epoch]
+        for k in stale:
+            self._evict(k)
+        self.plan_store.invalidate_epoch(keep_epoch)
+        return len(stale)
+
+    def __len__(self) -> int:
+        return len(self._lru)
 
     @property
     def hit_rate(self) -> float:
-        return self._lru.hit_rate
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "size": len(self._lru),
+            "graphs": len(self._by_graph),
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hit_rate,
+            "builds": self.builds,
+            "releases": self.releases,
+        }

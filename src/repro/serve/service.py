@@ -31,9 +31,8 @@ import time
 import numpy as np
 
 from jax.sharding import Mesh
-import jax.numpy as jnp
 
-from repro.core import paa, planner, strategies
+from repro.core import paa, planner, plans, strategies
 from repro.core import regex as rx
 from repro.core.cost_model import NetworkParams
 from repro.core.strategies import StrategyCost
@@ -57,6 +56,7 @@ class ServeConfig:
     total_edges: int | None = None  # |E| from the count probe; None = sample size
     plan_cache_size: int = 256
     exec_cache_size: int = 64
+    plan_store_size: int = 16  # Stage-A artifacts (see repro.core.plans)
     max_batch: int = 128  # S2 starts per executor call (before bucketing)
     max_pending: int = 1024  # admission queue bound
     s1_coalesce_labels: int = 48  # union-label budget per coalesced S1 gather
@@ -164,25 +164,38 @@ class QueryService:
         self._label_weights = strategies.EDGE_SYMBOLS * self.sample.label_counts().astype(float)
         self.model = planner.fit_model(self.sample, self.config.model_kind)
         self.plan_cache = plancache.PlanCache(self.config.plan_cache_size)
-        self.exec_cache = plancache.ExecutorCache(self.config.exec_cache_size)
+        # two-stage compilation: one Stage-A store shared by every
+        # automaton signature, backend, and site of this placement
+        self.plan_store = plans.GraphPlanStore(self.config.plan_store_size)
+        self.exec_cache = plancache.ExecutorCache(
+            self.config.exec_cache_size, plan_store=self.plan_store
+        )
         self.calibrator = feedback.Calibrator(decay=self.config.calibration_decay)
         self.metrics = metrics_mod.ServiceMetrics()
         self._queue: list[_Request] = []
-        # stage the padded site arrays once; they are static per placement
-        host = placement.padded_device_arrays()
-        self._device_arrays = {k: jnp.asarray(v) for k, v in host.items()}
+        # stage the padded site arrays once per epoch; static per placement
+        self._device_arrays = self.plan_store.site_device_arrays(
+            placement, epoch=self.stats_epoch
+        )
 
     # -- stats epoch --------------------------------------------------------
 
     def refresh_stats(self, sample: LabeledGraph) -> None:
         """Install fresh sample statistics: refit the model and bump the
-        epoch (which implicitly invalidates every cached plan)."""
+        epoch — which implicitly invalidates every cached plan, and
+        invalidates Stage A exactly once (executors and staged artifacts
+        of the old epoch are dropped from the caches; anything already
+        handed out keeps its own references and completes normally)."""
         if sample.labels != self.placement.graph.labels:
             raise ValueError("sample must share the placement's label vocabulary")
         self.sample = sample
         self._label_weights = strategies.EDGE_SYMBOLS * sample.label_counts().astype(float)
         self.model = planner.fit_model(sample, self.config.model_kind)
         self.stats_epoch += 1
+        self.exec_cache.drop_epoch(self.stats_epoch)  # also sweeps the plan store
+        self._device_arrays = self.plan_store.site_device_arrays(
+            self.placement, epoch=self.stats_epoch
+        )
 
     # -- admission ----------------------------------------------------------
 
@@ -301,6 +314,7 @@ class QueryService:
                     backend=cfg.s2_backend, graph=self.placement.graph,
                     replication_factor=self.placement.replication_factor,
                     block_size=cfg.s2_block_size, placement=self.placement,
+                    stats_epoch=self.stats_epoch,
                 )
 
                 def execute(starts, exemplar):
@@ -411,15 +425,21 @@ class QueryService:
             self._run_s2(s2)
         if s1:
             self._run_s1(s1)
+        # surface the two-stage-compilation counters in the flush stats
+        self.metrics.set_cache_stats(
+            exec_cache=self.exec_cache.stats(), plan_store=self.plan_store.stats()
+        )
         return [r.ticket for r in pending]
 
     # -- reporting -----------------------------------------------------------
 
     def summary(self) -> dict:
+        self.metrics.set_cache_stats(
+            exec_cache=self.exec_cache.stats(), plan_store=self.plan_store.stats()
+        )
         return self.metrics.summary(
             extra={
                 "plan_cache": self.plan_cache.stats(),
-                "exec_cache": self.exec_cache.stats(),
                 "calibration": self.calibrator.summary(),
                 "stats_epoch": self.stats_epoch,
             }
