@@ -8,11 +8,17 @@ plan-cache hit rate) so the perf trajectory accumulates across PRs.
 
 Run all:     PYTHONPATH=src python -m benchmarks.run
 Run subset:  PYTHONPATH=src python -m benchmarks.run serve fig3
+Regression:  PYTHONPATH=src python -m benchmarks.run dist --regress
+             (re-runs the ``dist`` subset and exits non-zero if any
+             fixpoint-ms metric regressed > REGRESS_FACTOR× vs the
+             checked-in BENCH_frontier_sharded.json baseline)
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
 import traceback
 
@@ -21,6 +27,45 @@ KNOWN = [
     "serve", "frontier", "dist", "plans",
 ]
 
+# --regress gate: a fresh `dist` run may not be slower than the
+# checked-in baseline by more than this factor on any fixpoint-ms metric
+# (latency-noise headroom included; step counts are exact and need no
+# tolerance, so latency is the regression signal)
+REGRESS_FACTOR = 1.3
+DIST_JSON = "BENCH_frontier_sharded.json"
+
+
+def _collect_ms(d: dict, prefix: str = "") -> dict[str, float]:
+    """Flatten every ``fixpoint_ms*`` leaf of a BENCH json (nested site
+    sections included) into dotted-path → milliseconds."""
+    out: dict[str, float] = {}
+    for k, v in d.items():
+        path = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_collect_ms(v, path + "."))
+        elif isinstance(k, str) and k.startswith("fixpoint_ms") and isinstance(
+            v, (int, float)
+        ):
+            out[path] = float(v)
+    return out
+
+
+def check_regressions(baseline: dict, fresh: dict, factor: float = REGRESS_FACTOR):
+    """Compare every fixpoint-ms metric of a fresh run against the
+    checked-in baseline; returns (csv rows, regressed metric names)."""
+    base_ms, new_ms = _collect_ms(baseline), _collect_ms(fresh)
+    rows, failed = [], []
+    for key, old in sorted(base_ms.items()):
+        new = new_ms.get(key)
+        if new is None:  # metric dropped from the schema: not a slowdown
+            continue
+        ratio = new / old if old > 0 else float("inf")
+        ok = ratio <= factor
+        rows.append(f"regress,{key},{old:.4f},{new:.4f},{ratio:.3f},{'ok' if ok else 'REGRESSED'}")
+        if not ok:
+            failed.append(key)
+    return rows, failed
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -28,11 +73,29 @@ def main() -> None:
         "names", nargs="*",
         help=f"benchmarks to run (default: all of {KNOWN})",
     )
+    ap.add_argument(
+        "--regress", action="store_true",
+        help=(
+            "after the `dist` subset, compare every fixpoint-ms metric "
+            f"against the checked-in {DIST_JSON} and exit non-zero on a "
+            f"> {REGRESS_FACTOR}x slowdown"
+        ),
+    )
     args = ap.parse_args()
     unknown = set(args.names) - set(KNOWN)
     if unknown:
         ap.error(f"unknown benchmark(s) {sorted(unknown)}; choose from {KNOWN}")
     selected = set(args.names) if args.names else set(KNOWN)
+
+    baseline = None
+    if args.regress:
+        if "dist" not in selected:
+            ap.error("--regress gates the `dist` subset; include it in names")
+        try:
+            with open(DIST_JSON) as f:
+                baseline = json.load(f)  # snapshot BEFORE the run overwrites it
+        except FileNotFoundError:
+            ap.error(f"--regress needs a checked-in {DIST_JSON} baseline")
 
     from benchmarks import (
         fig2_costs,
@@ -74,6 +137,22 @@ def main() -> None:
             traceback.print_exc()
             print(f"{name},ERROR")
         print(f"# {name} took {time.time() - t0:.1f}s", flush=True)
+
+    if baseline is not None:
+        print("# ==== regress " + "=" * 50, flush=True)
+        print("regress,metric,baseline_ms,fresh_ms,ratio,status")
+        with open(DIST_JSON) as f:
+            fresh = json.load(f)
+        rows, failed = check_regressions(baseline, fresh)
+        for row in rows:
+            print(row)
+        if failed:
+            print(
+                f"regress,FAIL,{len(failed)} metric(s) slower than "
+                f"{REGRESS_FACTOR}x baseline: {';'.join(failed)}"
+            )
+            sys.exit(1)
+        print(f"regress,OK,every fixpoint-ms within {REGRESS_FACTOR}x of baseline")
 
 
 if __name__ == "__main__":

@@ -14,6 +14,10 @@ backends, and all sites:
   :func:`repro.kernels.frontier.ops.stage_sharded_graph`
   (``backend="frontier_kernel_sharded"``: n_sites packings per build
   without the store),
+* the slabs' power-of-two shape buckets —
+  :func:`repro.kernels.frontier.ops.bucket_staged_sites`, keyed by
+  (axis_size, floor) on top of the staging key; the resulting
+  ``bucket_id`` also joins the executor cache's graph key,
 * the placement's padded site edge arrays on device (the ``reference``
   executor's and S1's gather operands),
 * per-site site-local graph views,
@@ -91,6 +95,11 @@ class GraphPlanStore:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # running Stage-B padding accounting over every sharded plan
+        # built against this store (see record_plan_pad_waste)
+        self._pad_useful = 0
+        self._pad_padded = 0
+        self._bucket_steps: dict[str, int] = {}
 
     # -- core get-or-build --------------------------------------------------
 
@@ -142,6 +151,55 @@ class GraphPlanStore:
             ),
         )
 
+    def staged_merged(
+        self,
+        placement: Placement,
+        block_size: int = 128,
+        n_groups: int = 1,
+        epoch: int = 0,
+    ) -> fops.StagedShardedGraph:
+        """Device-granular staging: each device's co-located sites merged
+        into ONE deduplicated union slab (see
+        :func:`repro.kernels.frontier.ops.merge_staged_sites`) — the
+        sharded executor's expansion operand.  When every site has its
+        own device this is the per-site staging itself (no copy)."""
+        key = ("staged_merged", id(placement), epoch, block_size, n_groups)
+        return self._get(
+            key,
+            placement,
+            epoch,
+            lambda: fops.merge_staged_sites(
+                self.staged_sharded(placement, block_size, epoch), n_groups
+            ),
+        )
+
+    def tile_buckets(
+        self,
+        placement: Placement,
+        block_size: int = 128,
+        axis_size: int = 1,
+        epoch: int = 0,
+        floor: int = fops.BUCKET_FLOOR,
+    ) -> fops.ShardedTileBuckets:
+        """The sharded fused backend's Stage-A shape buckets: the
+        device-granular merged slabs grouped into power-of-two tile
+        classes and stacked on device per bucket.  Keyed by (placement,
+        axis_size, floor) on top of the staging key — the bucket layout
+        depends on how sites block over the mesh's site axes, but not on
+        the automaton.  The resulting ``bucket_id`` joins the executor
+        cache's graph key."""
+        key = ("tile_buckets", id(placement), epoch, block_size, axis_size, floor)
+        return self._get(
+            key,
+            placement,
+            epoch,
+            lambda: fops.bucket_staged_sites(
+                self.staged_merged(placement, block_size, axis_size, epoch),
+                axis_size,
+                floor,
+            ),
+        )
+
     def site_device_arrays(
         self, placement: Placement, epoch: int = 0
     ) -> dict[str, jnp.ndarray]:
@@ -190,6 +248,32 @@ class GraphPlanStore:
     def clear(self) -> None:
         self.evictions += len(self._lru)
         self._lru.clear()
+
+    # -- padding accounting --------------------------------------------------
+
+    def record_plan_pad_waste(self, plan) -> None:
+        """Accumulate one sharded plan's grid-step padding accounting:
+        ``useful`` counts each site's own (unpadded) schedule length,
+        ``padded`` the grid slots its shape bucket actually executes.
+        Per-bucket executed steps are keyed ``"<n_steps>x<n_tiles>"`` —
+        the serve metrics' per-bucket grid-step counters."""
+        self._pad_useful += int(plan.useful_steps)
+        self._pad_padded += int(plan.padded_steps)
+        for b in plan.buckets:
+            key = f"{b.n_steps}x{b.n_tiles}"
+            self._bucket_steps[key] = (
+                self._bucket_steps.get(key, 0) + b.n_steps * len(b.sites)
+            )
+
+    def pad_stats(self) -> dict:
+        return {
+            "useful_steps": self._pad_useful,
+            "padded_steps": self._pad_padded,
+            "pad_waste_ratio": (
+                self._pad_padded / self._pad_useful if self._pad_useful else 0.0
+            ),
+            "bucket_grid_steps": dict(self._bucket_steps),
+        }
 
     # -- reporting ----------------------------------------------------------
 

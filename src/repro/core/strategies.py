@@ -419,6 +419,7 @@ def make_s2_step_fn(
     placement: Placement | None = None,
     plan_store=None,
     stats_epoch: int = 0,
+    bucket_floor: int | None = None,
 ):
     """Build the jitted batched S2 executor.
 
@@ -444,14 +445,17 @@ def make_s2_step_fn(
 
     * ``"frontier_kernel_sharded"`` — the fused kernel on *site-local*
       edge partitions (``placement`` required): each site's tile lists
-      are built from its own edges, padded to one common grid shape, and
-      run under ``shard_map`` over ``site_axes`` with a per-level
-      ``pmax`` frontier merge and a global convergence reduction — the
-      paper's distribution model (per-site local expansion + frontier
-      exchange per level) on the fused Pallas path.  The §4.2 meters run
-      per site on site-local degree vectors, so the returned costs carry
-      the *true* per-site response breakdown instead of a
-      replication-factor approximation.
+      are built from its own edges and padded only up to the site's
+      power-of-two *shape bucket* (``bucket_floor`` sets the smallest
+      class), then run under ``shard_map`` over ``site_axes`` — one
+      ``vmap``-ped fused call per bucket — with a double-buffered
+      ``ppermute`` ring forwarding each iteration's discoveries while
+      the next iteration's local expansion proceeds — the paper's
+      distribution model (per-site local expansion + frontier exchange)
+      on the fused Pallas path.  The §4.2 meters run per site on
+      site-local degree vectors, so the returned costs carry the *true*
+      per-site response breakdown instead of a replication-factor
+      approximation.
 
     Returns ``fn(src, lbl, dst, mask, starts) -> (answers, q_bc, d_s2,
     n_bc)`` — the sharded backend appends a fifth output ``d_s2_sites``
@@ -482,7 +486,7 @@ def make_s2_step_fn(
     if backend == "frontier_kernel_sharded":
         return _make_frontier_sharded_step_fn(
             ca, n_nodes, mesh, site_axes, batch_axis, max_levels, placement,
-            block_size, interpret, plan_store, stats_epoch,
+            block_size, interpret, plan_store, stats_epoch, bucket_floor,
         )
     if backend != "reference":
         raise ValueError(
@@ -699,10 +703,14 @@ def _make_frontier_step_fn(
                 d_s2 = d_s2 + EDGE_SYMBOLS * (new_g * deg_c[gi]).sum(axis=1)
                 new_done.append(jnp.maximum(done[gi], now_g))
             done = jnp.stack(new_done) if new_done else done
+            fre = fops.extend_frontier(
+                frontier, plan.union_members, n_states, q_pad
+            )
             counts = fkernel.fused_level_blocks(
-                frontier, plan.tiles, plan.firsts, plan.tile_ids,
+                fre, plan.tiles, plan.firsts, plan.valids, plan.tile_ids,
                 plan.f_rows, plan.f_cols, plan.o_rows, plan.o_cols,
                 plan.block_size, q_pad, interpret=interpret,
+                n_out_rows=n_states * q_pad,
             )
             nxt = jnp.minimum(counts, 1.0)
             new = nxt * (1.0 - visited)
@@ -797,37 +805,61 @@ def _make_frontier_sharded_step_fn(
     interpret: bool | None,
     plan_store=None,
     stats_epoch: int = 0,
+    bucket_floor: int | None = None,
 ):
     """The site-sharded fused-Pallas S2 executor
     (``backend="frontier_kernel_sharded"``).
 
-    Stage A — the per-site staged tile slabs, site-local graph views,
-    and per-label degree vectors (n_sites packings per build without
-    sharing!) — comes from ``plan_store`` when one is passed; only the
+    Stage A — the per-site staged tile slabs, their device-granular
+    merge, its shape buckets, site-local graph views, and per-label
+    degree vectors (n_sites packings per build without sharing!) —
+    comes from ``plan_store`` when one is passed; only the
     automaton-dependent Stage-B schedule is built per executor.
 
     Honors the paper's distribution model on the fused kernel path: each
-    site's block-sparse tiles come from *its own* edge partition
-    (replication included), padded to one common grid shape so a single
-    jitted program serves every site.  One BFS level is then, under
-    ``shard_map`` over ``site_axes``:
+    device's block-sparse tiles come from its own sites' edge partitions
+    (replication included), merged into one deduplicated union grid per
+    device (:func:`repro.kernels.frontier.ops.merge_staged_sites` —
+    boolean-semiring levels are identical on the union, and per-site
+    identity lives in the §4.2 meters and the cross-device exchange,
+    not in the expansion tiles) and padded only to the device's
+    power-of-two *shape bucket*
+    (see :func:`repro.kernels.frontier.ops.bucket_staged_sites`) —
+    never to the worst device's grid, and not at all when the bucket has
+    a single member — so padding waste stays bounded as site counts
+    grow, and all of a bucket's member rows run as ONE ``vmap``-ped
+    fused call.  One fixpoint iteration is then, under ``shard_map`` over
+    ``site_axes``:
 
-        local expansion   — one ``fused_level_blocks`` call per site on
-                            its local tiles (all transitions fused),
-        frontier exchange — ``lax.pmax`` of the thresholded counts over
-                            the site axes (boolean OR of per-site
-                            contributions — the collective form of
-                            'broadcast search + unicast responses'),
-        convergence       — ``(frontier > 0).any()`` on the merged
-                            (replicated) frontier inside the same
-                            device-resident ``lax.while_loop``.
+        local expansion   — per shape bucket, one (vmapped)
+                            ``fused_level_blocks`` call over this
+                            device's member sites (padding steps
+                            early-out in-kernel via the ``valids``
+                            prefetch flag),
+        frontier exchange — a double-buffered ring: each iteration
+                            ``lax.ppermute`` forwards the *previous*
+                            iteration's discoveries one hop along each
+                            site axis while the local expansion of this
+                            iteration proceeds — the permute is
+                            data-independent of the local compute, so
+                            the two overlap instead of serializing on a
+                            per-level ``pmax``,
+        convergence       — an ``active`` flag ``psum``-reduced at the
+                            *end* of each body (the while cond itself
+                            stays collective-free); every discovery
+                            travels the ring at most once, suppressed at
+                            the first device that already visited it, so
+                            the per-device visited sets converge to the
+                            same global fixpoint the pmax merge reached.
 
-    The §4.2 observed accounting runs per site: site-local degree
-    vectors meter each site's actual response symbols (a (group, node)
-    dedup bitmap keeps the §4.2.2 broadcast-cache semantics), so the
-    executor returns the true per-site breakdown ``d_s2_sites`` —
-    (n_sites, B) — alongside the psum'd total, instead of the global
-    backend's ``replication_factor`` approximation.
+    The §4.2 observed accounting runs per site on the device's
+    ``pending`` stream: every product state enters each device's pending
+    exactly once, and a (group, node) dedup bitmap keeps the §4.2.2
+    broadcast-cache semantics, so the converged meters equal the
+    merged-frontier meters bit-for-bit — the executor returns the true
+    per-site breakdown ``d_s2_sites`` (n_sites, B) alongside the psum'd
+    total, instead of the global backend's ``replication_factor``
+    approximation.
 
     The start batch is sharded over ``batch_axis`` (as in the reference
     backend): each batch shard runs its own q_pad-chunked fixpoints
@@ -854,15 +886,33 @@ def _make_frontier_sharded_step_fn(
         )
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if bucket_floor is None:
+        bucket_floor = fops.BUCKET_FLOOR
     if plan_store is not None:
         site_graphs = plan_store.local_graphs(placement, epoch=stats_epoch)
-        staged = plan_store.staged_sharded(placement, block_size, epoch=stats_epoch)
+        exec_staged = plan_store.staged_merged(
+            placement, block_size, axis_size, epoch=stats_epoch
+        )
+        tile_buckets = plan_store.tile_buckets(
+            placement, block_size, axis_size, epoch=stats_epoch, floor=bucket_floor
+        )
     else:
         site_graphs = [placement.local_graph(s) for s in range(placement.n_sites)]
         staged = fops.stage_sharded_graph(site_graphs, block_size)
-    plan = fops.build_sharded_level_schedule(ca, staged)
+        exec_staged = fops.merge_staged_sites(staged, axis_size)
+        tile_buckets = fops.bucket_staged_sites(exec_staged, axis_size, bucket_floor)
+    plan = fops.build_sharded_level_schedule(
+        ca, exec_staged, tile_buckets, axis_size=axis_size, bucket_floor=bucket_floor
+    )
+    if plan_store is not None:
+        plan_store.record_plan_pad_waste(plan)
     n_states, q_pad, v_pad = ca.n_states, plan.q_pad, plan.v_pad
+    union_members = plan.union_members
     levels = max_levels if max_levels is not None else n_states * n_nodes
+    # a discovery may need up to axis_size ring hops to reach the site
+    # holding the next edge, so the iteration budget scales accordingly
+    levels = levels * axis_size if axis_size > 1 else levels
+    n_buckets = len(plan.buckets)
 
     sgroups = symbol_set_groups(ca)
     n_groups = max(len(sgroups), 1)
@@ -878,22 +928,51 @@ def _make_frontier_sharded_step_fn(
     pay_c = jnp.asarray(payloads)
     state_rows = [jnp.asarray(states, jnp.int32) for _, states in sgroups]
 
-    def local(tiles, firsts, tids, frows, fcols, orows, ocols, deg_l, starts):
-        # leading dim of every plan array = this device's block of sites
-        s_local = tiles.shape[0]
+    def local(*ops):
+        # ops = 8 arrays per bucket (leading dim = this device's member
+        # sites of that bucket), then deg_l, starts
+        bucket_ops = [ops[i * 8 : (i + 1) * 8] for i in range(n_buckets)]
+        deg_l, starts = ops[-2], ops[-1]
+        s_local = deg_l.shape[0]
+
+        def expand(frontier):  # (n_states * q_pad, v_pad) -> same, {0,1}
+            fre = fops.extend_frontier(frontier, union_members, n_states, q_pad)
+            merged = jnp.zeros((n_states * q_pad, v_pad), jnp.float32)
+            for tiles, fi, vl, ti, fr, fc, orw, oc in bucket_ops:
+                if tiles.shape[0] == 1:
+                    counts = fkernel.fused_level_blocks(
+                        fre, tiles[0], fi[0], vl[0], ti[0], fr[0], fc[0],
+                        orw[0], oc[0], plan.block_size, q_pad,
+                        interpret=interpret, n_out_rows=n_states * q_pad,
+                    )
+                else:  # all of this bucket's local sites in ONE vmapped call
+                    counts = jax.vmap(
+                        lambda t, fi_, vl_, ti_, fr_, fc_, orw_, oc_: (
+                            fkernel.fused_level_blocks(
+                                fre, t, fi_, vl_, ti_, fr_, fc_, orw_, oc_,
+                                plan.block_size, q_pad, interpret=interpret,
+                                n_out_rows=n_states * q_pad,
+                            )
+                        )
+                    )(tiles, fi, vl, ti, fr, fc, orw, oc).max(axis=0)
+                merged = jnp.maximum(merged, counts)
+            return jnp.minimum(merged, 1.0)
 
         def fixpoint(flat0):  # (n_states * q_pad, v_pad) f32 0/1
             zero_q = jnp.zeros((q_pad,), jnp.float32)
 
             def cond(state):
-                _, frontier, lev = state[:3]
-                return jnp.logical_and((frontier > 0).any(), lev < levels)
+                # collective-free: `active` was psum-agreed in the body
+                active, lev = state[3], state[2]
+                return jnp.logical_and(active, lev < levels)
 
             def body(state):
-                visited, frontier, lev, done, q_bc, d_site, n_bc = state
-                fr3 = frontier.reshape(n_states, q_pad, v_pad)
-                # §4.2 meters on the (replicated) merged frontier: the
-                # broadcast side is global, the response side per site
+                visited, pending, lev, _, buf, done, q_bc, d_site, n_bc = state
+                fr3 = pending.reshape(n_states, q_pad, v_pad)
+                # §4.2 meters on this device's pending stream: every
+                # product state enters pending exactly once per device
+                # (the `done` bitmap dedups (group, node) pairs), so the
+                # converged totals match the merged-frontier meters
                 new_done = []
                 for gi, rows in enumerate(state_rows):
                     now_g = fr3[rows].max(axis=0)  # (q_pad, v_pad)
@@ -906,26 +985,47 @@ def _make_frontier_sharded_step_fn(
                     )
                     new_done.append(jnp.maximum(done[gi], now_g))
                 done = jnp.stack(new_done) if new_done else done
-                # local expansion: each site's fused level on its own tiles
-                merged = jnp.zeros_like(frontier)
-                for sl in range(s_local):
-                    counts = fkernel.fused_level_blocks(
-                        frontier, tiles[sl], firsts[sl], tids[sl],
-                        frows[sl], fcols[sl], orows[sl], ocols[sl],
-                        plan.block_size, q_pad, interpret=interpret,
-                    )
-                    merged = jnp.maximum(merged, jnp.minimum(counts, 1.0))
-                # frontier exchange: OR the per-site contributions
-                for ax in site_axes:
-                    merged = jax.lax.pmax(merged, ax)
-                new = merged * (1.0 - visited)
-                return jnp.maximum(visited, new), new, lev + 1, done, q_bc, d_site, n_bc
+                # local expansion over the shape buckets, overlapped with
+                # the ring forward of last iteration's discoveries (the
+                # ppermute reads `buf`, not `mine` — no data dependence)
+                mine = expand(pending)
+                incoming = mine
+                if axis_size > 1:
+                    # one hop per axis, each reading the ORIGINAL buf (a
+                    # sequential composition would shift diagonally and
+                    # miss devices on a multi-axis torus)
+                    for ax in site_axes:
+                        n_ax = int(mesh.shape[ax])
+                        if n_ax > 1:
+                            ring = jax.lax.ppermute(
+                                buf, ax, [(i, (i + 1) % n_ax) for i in range(n_ax)]
+                            )
+                            incoming = jnp.maximum(incoming, ring)
+                new = incoming * (1.0 - visited)  # exact on {0,1} floats
+                active = (new > 0).any()
+                if axis_size > 1:
+                    # agree `active` over EVERY mesh axis, not just
+                    # site_axes: the ring ppermute rendezvouses all
+                    # devices, so batch shards must run identical trip
+                    # counts (extra iterations on a converged shard are
+                    # no-ops: new stays zero).  Without a ring the body
+                    # is collective-free and shards exit independently.
+                    for ax in mesh.axis_names:
+                        if int(mesh.shape[ax]) > 1:
+                            active = jax.lax.psum(active.astype(jnp.int32), ax) > 0
+                return (
+                    jnp.maximum(visited, new), new, lev + 1, active, new,
+                    done, q_bc, d_site, n_bc,
+                )
 
-            visited, _, _, _, q_bc, d_site, n_bc = jax.lax.while_loop(
-                cond, body,
-                (flat0, flat0, jnp.int32(0),
-                 jnp.zeros((n_groups, q_pad, v_pad), jnp.float32),
-                 zero_q, jnp.zeros((s_local, q_pad), jnp.float32), zero_q),
+            state = (
+                flat0, flat0, jnp.int32(0), jnp.asarray(True),
+                jnp.zeros_like(flat0),
+                jnp.zeros((n_groups, q_pad, v_pad), jnp.float32),
+                zero_q, jnp.zeros((s_local, q_pad), jnp.float32), zero_q,
+            )
+            visited, _, _, _, _, _, q_bc, d_site, n_bc = jax.lax.while_loop(
+                cond, body, state
             )
             vis3 = visited.reshape(n_states, q_pad, v_pad)
             acc = jnp.zeros((q_pad, v_pad), jnp.float32)
@@ -965,12 +1065,21 @@ def _make_frontier_sharded_step_fn(
     spec_s = lambda extra: P(site_axes, *([None] * extra))  # noqa: E731
     b_ax = batch_axis if batch_axis and batch_axis in mesh.axis_names else None
     spec_b = P(b_ax) if b_ax else P()
+    bucket_args, bucket_specs = [], []
+    for bk in plan.buckets:
+        bucket_args += [
+            bk.tiles, bk.firsts, bk.valids, bk.tile_ids,
+            bk.f_rows, bk.f_cols, bk.o_rows, bk.o_cols,
+        ]
+        # tiles (rows, n_tiles, B, B); step arrays (rows, n_steps) — rows
+        # is device-major, so sharding it over site_axes hands each
+        # device exactly its member sites of this bucket
+        bucket_specs += [spec_s(3)] + [spec_s(1)] * 7
     sharded = shd.shard_map(
         local,
         mesh=mesh,
         in_specs=(
-            spec_s(3),  # tiles (n_sites, n_tiles, B, B)
-            spec_s(1), spec_s(1), spec_s(1), spec_s(1), spec_s(1), spec_s(1),
+            *bucket_specs,
             spec_s(2),  # deg (n_sites, n_groups, v_pad)
             spec_b,  # starts: sharded over the batch axis, every site sees
             # its batch shard's full frontier (the broadcast half)
@@ -985,11 +1094,7 @@ def _make_frontier_sharded_step_fn(
 
     def fn(src, lbl, dst, mask, starts):
         del src, lbl, dst, mask  # retrieval runs on the staged per-site tiles
-        return sharded(
-            plan.tiles, plan.firsts, plan.tile_ids,
-            plan.f_rows, plan.f_cols, plan.o_rows, plan.o_cols,
-            deg_c, starts,
-        )
+        return sharded(*bucket_args, deg_c, starts)
 
     return jax.jit(fn)
 
@@ -1009,6 +1114,7 @@ def s2_execute(
     interpret: bool | None = None,
     plan_store=None,
     stats_epoch: int = 0,
+    bucket_floor: int | None = None,
 ) -> tuple[np.ndarray, list[StrategyCost]]:
     """Run the batched S2 executor for ``start_nodes``.
 
@@ -1058,6 +1164,7 @@ def s2_execute(
             replication_factor=placement.replication_factor,
             block_size=block_size, interpret=interpret, placement=placement,
             plan_store=plan_store, stats_epoch=stats_epoch,
+            bucket_floor=bucket_floor,
         )
     out = step_fn(
         jnp.asarray(arrays["src"]),

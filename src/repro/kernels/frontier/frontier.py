@@ -18,19 +18,29 @@ Two grid layouts share this primitive:
 
 * :func:`fused_level_blocks` — an ENTIRE BFS level over all transitions
   of the automaton in one call.  The frontier operand is
-  (n_states · q_pad, v_pad): row-block s is automaton state s, and the
-  q_pad (= 8, the f32 sublane minimum that a single-query kernel would
-  waste) rows inside a block carry up to 8 independent queries' frontiers.
-  The grid concatenates every (transition, label) tile list, sorted by
-  (dst_state, block_col); per-step scalar prefetch ids select the input
-  row-block (src automaton state), the input col-block (tile block row),
-  the tile, and the output (dst state, block col).  Dispatch count per
-  level is exactly 1, independent of |transitions| and |labels|.
+  (n_rows · q_pad, v_pad): row-block s < n_states is automaton state s,
+  row-blocks past n_states are virtual *fan-in union rows* (the OR of
+  several source states' frontiers, precomputed by the caller — see
+  ``ops.extend_frontier``), and the q_pad (= 8, the f32 sublane minimum
+  that a single-query kernel would waste) rows inside a block carry up
+  to 8 independent queries' frontiers.  The grid concatenates every
+  fan-in transition group's tile list, sorted by (dst_state, block_col);
+  per-step scalar prefetch ids select the input row-block, the input
+  col-block (tile block row), the tile, and the output (dst state, block
+  col).  ``n_out_rows`` decouples the output height from the (extended)
+  input height.  Dispatch count per level is exactly 1, independent of
+  |transitions| and |labels|.
 
 :func:`fused_level_blocks` also serves the site-sharded S2 backend: each
-site runs it on a grid built from its *own* edge partition (padded to a
-common shape — see ``ops.build_sharded_level_plan``) and the per-site
-outputs OR-merge across the site axis per level.
+site runs it on a grid built from its *own* edge partition (bucketed
+into power-of-two shape classes — see ``ops.build_sharded_level_plan``)
+and the per-site outputs OR-merge across the site axis per level.
+
+``valids`` is the in-kernel zero-step skip: a step with ``valids=0``
+(a zero-tile cover step or a shape-class padding step) only runs the
+``firsts`` zero-init predicate — it never issues the tile product, so
+padding a schedule up to its bucket's power-of-two grid length costs a
+predicate per step, not a tile pass.
 
 Boolean OR is implemented as saturating add in f32 (counts then >0) —
 MXU-native, exact for path-counting up to 2^24 (f32 integer range), and
@@ -115,37 +125,46 @@ def frontier_step_blocks(
 
 
 def _fused_level_kernel(
-    firsts_ref, tids_ref, frows_ref, fcols_ref, orows_ref, ocols_ref, f_ref, a_ref, o_ref
+    firsts_ref, valids_ref, tids_ref, frows_ref, fcols_ref, orows_ref, ocols_ref,
+    f_ref, a_ref, o_ref,
 ):
     """One grid step of the fused level:
 
-        o[dst_state, :, ocol] += f[src_state, :, frow] @ tiles[tid]
+        o[dst_state, :, ocol] += f[frow, :, fcol] @ tiles[tid]
 
-    where the middle dim is the q_pad stacked-query rows.  ``firsts`` is
-    precomputed on the host (steps are sorted by (dst_state, block_col),
-    so the first step of each output block is known statically) — it
-    gates the zero-init of the output block before accumulation."""
+    where the middle dim is the q_pad stacked-query rows and ``frow`` may
+    address a virtual fan-in union row past the automaton states.
+    ``firsts`` is precomputed on the host (steps are sorted by
+    (dst_state, block_col), so the first step of each output block is
+    known statically) — it gates the zero-init of the output block before
+    accumulation.  ``valids`` gates the tile product itself: cover and
+    shape-class padding steps (``valids=0``) early-out after the
+    predicate instead of multiplying the zero tile."""
     i = pl.program_id(0)
 
     @pl.when(firsts_ref[i] == 1)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    o_ref[...] += jnp.dot(f_ref[...], a_ref[0], preferred_element_type=jnp.float32)
+    @pl.when(valids_ref[i] == 1)
+    def _accumulate():
+        o_ref[...] += jnp.dot(f_ref[...], a_ref[0], preferred_element_type=jnp.float32)
 
 
 def fused_level_blocks(
-    frontier: jax.Array,  # (n_states * q_pad, v_pad) f32 0/1
+    frontier: jax.Array,  # (n_rows * q_pad, v_pad) f32 0/1 (union rows appended)
     tiles: jax.Array,  # (n_tiles, B, B) f32 0/1; index 0 is the zero cover tile
     firsts: jax.Array,  # (n_steps,) int32 ∈ {0,1}: first visit to the output block
+    valids: jax.Array,  # (n_steps,) int32 ∈ {0,1}: 0 = cover/padding, skip the dot
     tile_ids: jax.Array,  # (n_steps,) int32 into tiles
-    f_rows: jax.Array,  # (n_steps,) int32: input row-block = src automaton state
+    f_rows: jax.Array,  # (n_steps,) int32: input row-block (state or union row)
     f_cols: jax.Array,  # (n_steps,) int32: input col-block = tile block row
     o_rows: jax.Array,  # (n_steps,) int32: output row-block = dst automaton state
     o_cols: jax.Array,  # (n_steps,) int32: output col-block = tile block col
     block_size: int,
     q_pad: int,
     interpret: bool = False,
+    n_out_rows: int | None = None,  # output height; default = frontier height
 ) -> jax.Array:
     """One BFS level over ALL transitions in a single pallas_call.
 
@@ -153,30 +172,36 @@ def fused_level_blocks(
     writes are consecutive (the TPU output-revisiting rule), and the step
     list must cover every (dst_state, block_col) output block at least
     once (uncovered blocks are otherwise left undefined) — the plan
-    builder appends zero-tile cover steps for that.  Returns the raw
-    count matrix (n_states * q_pad, v_pad); callers threshold >0.
+    builder appends zero-tile cover steps for that.  ``n_out_rows``
+    (default: the frontier height) sets the output height independently
+    of the input, which may carry extra fan-in union rows.  Returns the
+    raw count matrix (n_out_rows, v_pad); callers threshold >0.
     """
     n_rows, v_pad = frontier.shape
+    if n_out_rows is None:
+        n_out_rows = n_rows
     n_steps = tile_ids.shape[0]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=6,
+        num_scalar_prefetch=7,
         grid=(n_steps,),
         in_specs=[
             pl.BlockSpec(
-                (q_pad, block_size), lambda i, fi, ti, fr, fc, orw, oc: (fr[i], fc[i])
+                (q_pad, block_size),
+                lambda i, fi, vl, ti, fr, fc, orw, oc: (fr[i], fc[i]),
             ),
             pl.BlockSpec(
                 (1, block_size, block_size),
-                lambda i, fi, ti, fr, fc, orw, oc: (ti[i], 0, 0),
+                lambda i, fi, vl, ti, fr, fc, orw, oc: (ti[i], 0, 0),
             ),
         ],
         out_specs=pl.BlockSpec(
-            (q_pad, block_size), lambda i, fi, ti, fr, fc, orw, oc: (orw[i], oc[i])
+            (q_pad, block_size),
+            lambda i, fi, vl, ti, fr, fc, orw, oc: (orw[i], oc[i]),
         ),
     )
     return pl.pallas_call(
         _fused_level_kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n_rows, v_pad), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n_out_rows, v_pad), jnp.float32),
         interpret=interpret,
-    )(firsts, tile_ids, f_rows, f_cols, o_rows, o_cols, frontier, tiles)
+    )(firsts, valids, tile_ids, f_rows, f_cols, o_rows, o_cols, frontier, tiles)

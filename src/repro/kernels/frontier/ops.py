@@ -5,22 +5,33 @@ what depends on the data distribution and what depends on the query):
 
 * **Stage A — graph-dependent, automaton-independent.**
   ``make_blocked_graph`` packs every label's adjacency into block-sparse
-  tiles; :func:`stage_graph` concatenates all label stores into ONE
-  device tile tensor plus per-(direction, label) offset tables, and
-  :func:`stage_sharded_graph` does the same per site (padded to a common
-  tile count).  Built once per (graph, block_size) — shared by every
-  automaton signature (see :class:`repro.core.plans.GraphPlanStore`).
+  tiles; :func:`stage_graph` concatenates all label stores — plus one
+  *any-label union store* per direction, so a wildcard transition costs
+  one tile list instead of |labels| — into ONE device tile tensor with
+  per-(direction, label) offset tables.  :func:`stage_sharded_graph`
+  does the same per site, keeping each site's slab at its own natural
+  size; :func:`bucket_staged_sites` then groups the per-site slabs into
+  a small set of power-of-two tile-count *shape buckets* (stacked per
+  bucket for ``shard_map``/``vmap`` dispatch).  Built once per (graph,
+  block_size) — shared by every automaton signature (see
+  :class:`repro.core.plans.GraphPlanStore`, which caches Stage A per
+  shape bucket).
 
 * **Stage B — automaton-dependent, cheap.**
   :func:`build_level_schedule` / :func:`build_sharded_level_schedule`
   only compute grid ordering and the scalar-prefetch id arrays over the
   Stage-A offsets — zero tile packing, zero tile-tensor transfers; the
-  returned plans *alias* the staged tile tensor.
+  returned plans *alias* the staged tiles.  Transitions that share
+  (dst_state, direction, label) fuse into ONE pass over a *fan-in union
+  row* (``Σ_src f[src] @ A == (Σ_src f[src]) @ A`` under saturating
+  counts); the virtual union rows are appended to the frontier operand
+  by :func:`extend_frontier` and recorded on the plan as
+  ``union_members``.
 
 Three execution paths share the staged tiles:
 
-* **Fused (default)** — ``build_level_plan`` concatenates every
-  (transition, label) tile list of a compiled automaton into one grid
+* **Fused (default)** — ``build_level_plan`` schedules every fan-in
+  transition group's tile list of a compiled automaton into one grid
   sorted by (dst_state, block_col); ``expand_level_fused`` runs a whole
   BFS level as ONE ``pallas_call`` and ``reach_fixpoint`` wraps it in a
   device-resident ``lax.while_loop`` (no host syncs between levels).
@@ -28,9 +39,11 @@ Three execution paths share the staged tiles:
   ``multi_query_reach`` answers 8 start masks for the price of one.
 
 * **Site-sharded fused** — ``build_sharded_level_plan`` builds one such
-  schedule per *site* from that site's own edge partition and pads all
-  of them to a common grid shape; ``repro.core.strategies`` wraps the
-  per-site grids in ``shard_map`` with a per-level frontier merge
+  schedule per *site* from that site's own edge partition and pads each
+  only up to its shape bucket's power-of-two grid length (padding steps
+  are ``valids=0`` predicates, skipped in-kernel — no tile pass);
+  ``repro.core.strategies`` dispatches each bucket's stacked sites as
+  one ``vmap``-ped fused call under ``shard_map``
   (``backend="frontier_kernel_sharded"``) — the paper's distribution
   model on the fused kernel path.
 
@@ -63,6 +76,15 @@ from repro.kernels.frontier.ref import pack_blocks
 # stack up to QPAD independent queries' frontiers per automaton state.
 QPAD = 8
 
+# offset-table key for the any-label union store (wildcard transitions);
+# real label ids are >= 0 so the key space is disjoint.
+ANY_LABEL = -1
+
+# smallest power-of-two shape class for bucketed sharded grids: buckets
+# never round below this, so near-empty sites share one tiny class
+# instead of fragmenting into one bucket each.
+BUCKET_FLOOR = 8
+
 # Build-path instrumentation: every Stage-A packing/staging op and every
 # Stage-B schedule construction bumps a counter, so tests and
 # ``benchmarks/plan_store.py`` can assert that warm executor builds pack
@@ -72,6 +94,12 @@ BUILD_COUNTERS: collections.Counter = collections.Counter()
 
 def reset_build_counters() -> None:
     BUILD_COUNTERS.clear()
+
+
+def shape_class(n: int, floor: int = BUCKET_FLOOR) -> int:
+    """The power-of-two shape bucket ``n`` rounds up into (≥ ``floor``)."""
+    n = max(int(n), 1)
+    return max(floor, 1 << (n - 1).bit_length())
 
 
 @dataclasses.dataclass
@@ -111,10 +139,12 @@ class StagedGraph:
 
     ``tiles[0]`` is the all-zero cover tile; ``offsets[(direction,
     label_id)] = (base, block_rows, block_cols)`` says where that label
-    store's tiles start and which (row, col) block each occupies.
-    Automaton-independent: any number of Stage-B schedules
-    (:func:`build_level_schedule`) index into one staged tensor without
-    re-packing or re-transferring tiles."""
+    store's tiles start and which (row, col) block each occupies.  The
+    ``(direction, ANY_LABEL)`` entries are the any-label union stores
+    (the saturated OR of every label's adjacency per direction) that
+    ground wildcard transitions in one tile list.  Automaton-independent:
+    any number of Stage-B schedules (:func:`build_level_schedule`) index
+    into one staged tensor without re-packing or re-transferring tiles."""
 
     n_nodes: int
     v_pad: int
@@ -123,10 +153,37 @@ class StagedGraph:
     offsets: dict[tuple[int, int], tuple[int, np.ndarray, np.ndarray]]
 
 
+def _union_store(
+    stores: dict[tuple[int, int], tuple[np.ndarray, np.ndarray, np.ndarray]],
+    direction: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray] | None:
+    """The any-label union store of one direction: the block-sparse
+    saturated OR of every label store's tiles (an edge with any label is
+    an edge), so a wildcard grounds to ONE tile list instead of |labels|."""
+    acc: dict[tuple[int, int], np.ndarray] = {}
+    for (d, lid), (t, r, c) in stores.items():
+        if d != direction or lid < 0:
+            continue
+        for j in range(t.shape[0]):
+            key = (int(r[j]), int(c[j]))
+            if key in acc:
+                acc[key] = np.maximum(acc[key], t[j])
+            else:
+                acc[key] = np.asarray(t[j], np.float32).copy()
+    if not acc:
+        return None
+    keys = sorted(acc, key=lambda rc: (rc[1], rc[0]))  # pack_blocks col order
+    tiles = np.minimum(np.stack([acc[k] for k in keys]), 1.0).astype(np.float32)
+    rows = np.asarray([k[0] for k in keys], np.int32)
+    cols = np.asarray([k[1] for k in keys], np.int32)
+    return tiles, rows, cols
+
+
 def _label_tile_lists(
     source: LabeledGraph | BlockedGraph, block_size: int
 ) -> tuple[int, int, dict[tuple[int, int], tuple[np.ndarray, np.ndarray, np.ndarray]]]:
-    """Host tile lists per (direction, label): from a raw graph (packing
+    """Host tile lists per (direction, label) — plus the two
+    ``(direction, ANY_LABEL)`` union stores — from a raw graph (packing
     directly to numpy, no per-label device arrays) or an existing
     :class:`BlockedGraph` (pulling its tiles back to host once)."""
     if isinstance(source, BlockedGraph):
@@ -134,20 +191,26 @@ def _label_tile_lists(
         for direction, store in ((FWD, source.fwd), (INV, source.inv)):
             for lid, (t, r, c) in store.items():
                 stores[(direction, lid)] = (np.asarray(t), np.asarray(r), np.asarray(c))
-        return source.n_nodes, source.v_pad, stores
-    g = source
-    stores = {}
-    for lid in range(g.n_labels):
-        src, dst = g.edges_with_label(lid)
-        if len(src) == 0:
-            continue
-        BUILD_COUNTERS["pack_blocks"] += 2
-        t, r, c, _ = pack_blocks(src, dst, g.n_nodes, block_size)
-        stores[(FWD, lid)] = (t, r, c)
-        t, r, c, _ = pack_blocks(dst, src, g.n_nodes, block_size)
-        stores[(INV, lid)] = (t, r, c)
-    v_pad = -(-g.n_nodes // block_size) * block_size
-    return g.n_nodes, v_pad, stores
+        n_nodes, v_pad = source.n_nodes, source.v_pad
+    else:
+        g = source
+        stores = {}
+        for lid in range(g.n_labels):
+            src, dst = g.edges_with_label(lid)
+            if len(src) == 0:
+                continue
+            BUILD_COUNTERS["pack_blocks"] += 2
+            t, r, c, _ = pack_blocks(src, dst, g.n_nodes, block_size)
+            stores[(FWD, lid)] = (t, r, c)
+            t, r, c, _ = pack_blocks(dst, src, g.n_nodes, block_size)
+            stores[(INV, lid)] = (t, r, c)
+        n_nodes = g.n_nodes
+        v_pad = -(-g.n_nodes // block_size) * block_size
+    for direction in (FWD, INV):
+        u = _union_store(stores, direction)
+        if u is not None:
+            stores[(direction, ANY_LABEL)] = u
+    return n_nodes, v_pad, stores
 
 
 def _concat_stores(
@@ -172,7 +235,8 @@ def stage_graph(
     source: LabeledGraph | BlockedGraph, block_size: int = 128
 ) -> StagedGraph:
     """Stage A for the global fused backend: pack (if needed) and
-    concatenate every label's tiles into one device tensor + offsets."""
+    concatenate every label's tiles — plus the per-direction any-label
+    union stores — into one device tensor + offsets."""
     BUILD_COUNTERS["stage_graph"] += 1
     n_nodes, v_pad, stores = _label_tile_lists(source, block_size)
     tiles, offsets = _concat_stores(stores, block_size)
@@ -187,29 +251,33 @@ def stage_graph(
 
 @dataclasses.dataclass
 class StagedShardedGraph:
-    """Stage A for the site-sharded backend: per-site staged tile
-    tensors padded to ONE common tile count and stacked (leading
-    ``n_sites`` dim, laid out for ``shard_map(in_specs=P(site_axes,
-    ...))``).  Padding tiles are all-zero and unreferenced.  Per-site
-    offset tables index into that site's slab; Stage-B schedules
-    (:func:`build_sharded_level_schedule`) share one staged stack across
-    every automaton signature."""
+    """Stage A for the site-sharded backend: per-site staged tile slabs,
+    each at its *own natural* tile count (no cross-site padding here —
+    shape bucketing happens in :func:`bucket_staged_sites`).  Slabs stay
+    on host; the device transfer happens once per shape bucket when the
+    bucket stacks are built.  Per-site offset tables index into that
+    site's slab; Stage-B schedules (:func:`build_sharded_level_schedule`)
+    share one staging across every automaton signature."""
 
     n_sites: int
     n_nodes: int
     v_pad: int
     block_size: int
-    n_tiles: int  # common (padded) per-site tile count
-    tiles: jnp.ndarray  # (n_sites, n_tiles, B, B) f32; index 0 = zero tile
+    site_tiles: tuple[np.ndarray, ...]  # per site: (n_tiles_s, B, B) f32
     site_offsets: tuple[dict[tuple[int, int], tuple[int, np.ndarray, np.ndarray]], ...]
+
+    @property
+    def site_n_tiles(self) -> tuple[int, ...]:
+        return tuple(int(t.shape[0]) for t in self.site_tiles)
 
 
 def stage_sharded_graph(
     site_graphs: list[LabeledGraph], block_size: int = 128
 ) -> StagedShardedGraph:
     """Stage A per site: each site's tile lists come from *its own* edge
-    partition (replication included); all slabs pad to the max tile
-    count so one jitted program serves every site.
+    partition (replication included), kept at the site's natural size —
+    padding only happens later, up to the site's power-of-two shape
+    bucket (:func:`bucket_staged_sites`), never up to the global max.
 
     Every site graph must share ``n_nodes`` (the global node id space) so
     all sites agree on ``v_pad`` and block indexing; a site holding zero
@@ -221,25 +289,230 @@ def stage_sharded_graph(
     if any(g.n_nodes != n_nodes for g in site_graphs):
         raise ValueError("site graphs must share the global node id space")
     BUILD_COUNTERS["stage_sharded_graph"] += 1
-    per_site = []
+    site_tiles, site_offsets = [], []
     for g in site_graphs:
         _, _, stores = _label_tile_lists(g, block_size)
-        per_site.append(_concat_stores(stores, block_size))
-    n_tiles = max(t.shape[0] for t, _ in per_site)
-    stacked = np.zeros(
-        (len(site_graphs), n_tiles, block_size, block_size), np.float32
-    )
-    for s, (t, _) in enumerate(per_site):
-        stacked[s, : t.shape[0]] = t
+        t, offsets = _concat_stores(stores, block_size)
+        site_tiles.append(t)
+        site_offsets.append(offsets)
     v_pad = -(-n_nodes // block_size) * block_size
     return StagedShardedGraph(
         n_sites=len(site_graphs),
         n_nodes=n_nodes,
         v_pad=v_pad,
         block_size=block_size,
-        n_tiles=n_tiles,
-        tiles=jnp.asarray(stacked),
-        site_offsets=tuple(offsets for _, offsets in per_site),
+        site_tiles=tuple(site_tiles),
+        site_offsets=tuple(site_offsets),
+    )
+
+
+def merge_staged_sites(
+    staged: StagedShardedGraph, n_groups: int
+) -> StagedShardedGraph:
+    """Merge blocks of co-located sites into device-granular staging.
+
+    Under ``shard_map`` device ``d`` holds sites ``[d·k, (d+1)·k)``
+    (``k = n_sites / n_groups``); expansion-wise those sites' edges can
+    share ONE fused grid over their *deduplicated union* tiles — the
+    boolean-semiring level is identical on the union, co-located
+    replicas dedup for free, and the per-site cover steps collapse to
+    one set per device.  Per-site identity is untouched: the §4.2
+    meters keep their per-site degree vectors and the cross-device
+    exchange still moves only site-held discoveries.  Returns ``staged``
+    itself when ``k == 1`` (nothing to merge).  Host-side tile max — no
+    repacking from edges."""
+    if staged.n_sites % n_groups:
+        raise ValueError(
+            f"n_sites={staged.n_sites} must be divisible by n_groups={n_groups}"
+        )
+    k = staged.n_sites // n_groups
+    if k == 1:
+        return staged
+    BUILD_COUNTERS["merge_staged_sites"] += 1
+    site_tiles, site_offsets = [], []
+    for d in range(n_groups):
+        acc: dict[tuple[int, int], dict[tuple[int, int], np.ndarray]] = {}
+        for s in range(d * k, (d + 1) * k):
+            slab = staged.site_tiles[s]
+            for key, (base, rows, cols) in staged.site_offsets[s].items():
+                cur = acc.setdefault(key, {})
+                for j in range(len(rows)):
+                    rc = (int(rows[j]), int(cols[j]))
+                    t = slab[base + j]
+                    cur[rc] = (
+                        np.maximum(cur[rc], t) if rc in cur else np.asarray(t).copy()
+                    )
+        stores = {}
+        for key, tilemap in acc.items():
+            rcs = sorted(tilemap, key=lambda rc: (rc[1], rc[0]))  # pack_blocks order
+            stores[key] = (
+                np.stack([tilemap[rc] for rc in rcs]),
+                np.asarray([rc[0] for rc in rcs], np.int32),
+                np.asarray([rc[1] for rc in rcs], np.int32),
+            )
+        t, offsets = _concat_stores(stores, staged.block_size)
+        site_tiles.append(t)
+        site_offsets.append(offsets)
+    return StagedShardedGraph(
+        n_sites=n_groups,
+        n_nodes=staged.n_nodes,
+        v_pad=staged.v_pad,
+        block_size=staged.block_size,
+        site_tiles=tuple(site_tiles),
+        site_offsets=tuple(site_offsets),
+    )
+
+
+@dataclasses.dataclass
+class TileBucket:
+    """One power-of-two tile shape class of :func:`bucket_staged_sites`.
+
+    ``tiles`` stacks the member sites' slabs (zero-padded up to
+    ``n_tiles``) in shard_map row order: row ``d * len(slots) + j`` is
+    the site at slot ``slots[j]`` on device ``d``, so sharding the
+    leading dim over the site axes hands every device exactly its own
+    ``len(slots)`` rows — ready for one ``vmap``-ped fused call."""
+
+    n_tiles: int  # power-of-two padded per-site tile count
+    slots: tuple[int, ...]  # local site indices (uniform across devices)
+    sites: tuple[int, ...]  # global site ids, row-by-row (device-major)
+    tiles: jnp.ndarray  # (axis_size * len(slots), n_tiles, B, B) f32
+
+
+@dataclasses.dataclass
+class ShardedTileBuckets:
+    """Stage-A shape buckets: the staged per-site slabs grouped into a
+    small set of power-of-two tile-count classes.
+
+    Bucketing is by *slot* (a site's local index within its device's
+    block of ``n_sites / axis_size`` sites): under ``shard_map`` every
+    device traces ONE program, so per-site shape freedom exists only
+    across slots, and a slot's class is the power-of-two roundup of the
+    max tile count among the sites sharing it across devices.  At
+    ``axis_size=1`` (one device) slots are sites and each site lands in
+    its natural class.  Assignment is deterministic: ``bucket_id`` is a
+    pure function of (per-site tile counts, axis_size, floor)."""
+
+    axis_size: int
+    s_local: int
+    floor: int
+    buckets: tuple[TileBucket, ...]
+
+    @property
+    def bucket_id(self) -> tuple:
+        """Deterministic shape-bucket descriptor — joins the executor
+        cache's graph key (see ``repro.serve.plancache``)."""
+        return (
+            self.axis_size,
+            self.floor,
+            tuple((b.n_tiles, b.slots) for b in self.buckets),
+        )
+
+
+def bucket_staged_sites(
+    staged: StagedShardedGraph, axis_size: int = 1, floor: int = BUCKET_FLOOR
+) -> ShardedTileBuckets:
+    """Group the staged per-site slabs into power-of-two tile shape
+    buckets and stack each bucket's slabs on device (Stage A, cached per
+    shape bucket by :class:`repro.core.plans.GraphPlanStore`).
+
+    Quantization exists to let several members share ONE jitted program
+    (and, across devices, one SPMD shape) — a bucket that ends up with a
+    single member row has nothing to unify, so it keeps its natural tile
+    count instead of paying the power-of-two roundup."""
+    if staged.n_sites % axis_size:
+        raise ValueError(
+            f"n_sites={staged.n_sites} must be divisible by the site-axis "
+            f"size {axis_size} (sites are blocked over the site axes)"
+        )
+    BUILD_COUNTERS["bucket_staged_sites"] += 1
+    s_local = staged.n_sites // axis_size
+    n_tiles = staged.site_n_tiles
+    slot_class = {
+        sl: shape_class(
+            max(n_tiles[d * s_local + sl] for d in range(axis_size)), floor
+        )
+        for sl in range(s_local)
+    }
+    by_class: dict[int, list[int]] = {}
+    for sl in range(s_local):
+        by_class.setdefault(slot_class[sl], []).append(sl)
+    b = staged.block_size
+    buckets = []
+    for cls in sorted(by_class):
+        slots = tuple(sorted(by_class[cls]))
+        sites = tuple(
+            d * s_local + sl for d in range(axis_size) for sl in slots
+        )
+        if len(sites) == 1:  # nothing to unify: natural shape, no roundup
+            cls = n_tiles[sites[0]]
+        stack = np.zeros((len(sites), cls, b, b), np.float32)
+        for row, s in enumerate(sites):
+            stack[row, : n_tiles[s]] = staged.site_tiles[s]
+        buckets.append(
+            TileBucket(n_tiles=cls, slots=slots, sites=sites, tiles=jnp.asarray(stack))
+        )
+    return ShardedTileBuckets(
+        axis_size=axis_size, s_local=s_local, floor=floor, buckets=tuple(buckets)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fan-in union rows (shared by the global and sharded Stage-B schedules)
+# ---------------------------------------------------------------------------
+
+
+def fanin_frontier_rows(
+    ca: CompiledAutomaton,
+) -> tuple[dict[tuple[int, int, int], int], tuple[tuple[int, ...], ...]]:
+    """Fan-in transition grouping: transitions sharing (dst_state,
+    direction, label) read ONE frontier row, because under saturating
+    counts ``Σ_src f[src] @ A == (Σ_src f[src]) @ A``.
+
+    Returns ``(frow_map, union_members)``: ``frow_map[(dst, direction,
+    label_id)]`` is the frontier row-block the group reads — the single
+    source state, or a virtual union row ``n_states + u`` whose member
+    states are ``union_members[u]``.  Identical source sets share one
+    union row across groups.  Pure function of the automaton, so every
+    site of a sharded plan agrees on the extended frontier layout."""
+    groups: dict[tuple[int, int, int], set[int]] = {}
+    for t in ca.transitions:
+        groups.setdefault((t.dst, t.direction, t.label_id), set()).add(t.src)
+    frow_map: dict[tuple[int, int, int], int] = {}
+    union_index: dict[tuple[int, ...], int] = {}
+    union_members: list[tuple[int, ...]] = []
+    for key in sorted(groups):
+        srcs = tuple(sorted(groups[key]))
+        if len(srcs) == 1:
+            frow_map[key] = srcs[0]
+        else:
+            if srcs not in union_index:
+                union_index[srcs] = len(union_members)
+                union_members.append(srcs)
+            frow_map[key] = ca.n_states + union_index[srcs]
+    return frow_map, tuple(union_members)
+
+
+def extend_frontier(
+    frontier: jnp.ndarray,  # (n_states * q_pad, v_pad) f32 0/1
+    union_members: tuple[tuple[int, ...], ...],
+    n_states: int,
+    q_pad: int,
+) -> jnp.ndarray:
+    """Append one virtual row-block per fan-in source union: row-block
+    ``n_states + u`` is the elementwise OR (max on {0,1}) of the member
+    states' frontiers.  Cheap jnp ops outside the kernel — the fused
+    grid then reads each union ONCE per tile instead of once per member."""
+    if not union_members:
+        return frontier
+    v_pad = frontier.shape[-1]
+    fr3 = frontier.reshape(n_states, q_pad, v_pad)
+    ext = [fr3] + [
+        fr3[jnp.asarray(m, jnp.int32)].max(axis=0, keepdims=True)
+        for m in union_members
+    ]
+    return jnp.concatenate(ext, axis=0).reshape(
+        (n_states + len(union_members)) * q_pad, v_pad
     )
 
 
@@ -252,11 +525,15 @@ def stage_sharded_graph(
 class FusedLevelPlan:
     """Host-built schedule for :func:`fused_level_blocks`.
 
-    One grid step per (transition, label, nonzero tile) triple, plus one
-    zero-tile cover step per output block no real step writes (so every
-    output block is initialized).  Steps are sorted by (dst_state,
-    block_col) — the output-revisiting order — and ``firsts`` marks each
-    output block's first step for the in-kernel zero-init.
+    One grid step per (fan-in transition group, label, nonzero tile)
+    triple, plus one zero-tile cover step per output block no real step
+    writes (so every output block is initialized).  Steps are sorted by
+    (dst_state, block_col) — the output-revisiting order — ``firsts``
+    marks each output block's first step for the in-kernel zero-init,
+    and ``valids`` marks the steps that carry a real tile (cover steps
+    skip the tile product in-kernel).  ``union_members`` lists the fan-in
+    union rows the schedule's ``f_rows`` may address past ``n_states``;
+    callers extend the frontier with :func:`extend_frontier` first.
     """
 
     n_states: int
@@ -265,10 +542,12 @@ class FusedLevelPlan:
     block_size: int
     q_pad: int
     n_real_steps: int  # grid steps carrying a real tile (excludes covers)
+    union_members: tuple[tuple[int, ...], ...]
     tiles: jnp.ndarray  # (n_tiles, B, B); index 0 is the all-zero cover tile
     firsts: jnp.ndarray  # (n_steps,) int32 0/1
+    valids: jnp.ndarray  # (n_steps,) int32 0/1; 0 = cover step, dot skipped
     tile_ids: jnp.ndarray  # (n_steps,) int32
-    f_rows: jnp.ndarray  # (n_steps,) int32: src automaton state
+    f_rows: jnp.ndarray  # (n_steps,) int32: src state or union row
     f_cols: jnp.ndarray  # (n_steps,) int32: tile block row
     o_rows: jnp.ndarray  # (n_steps,) int32: dst automaton state
     o_cols: jnp.ndarray  # (n_steps,) int32: tile block col
@@ -278,26 +557,29 @@ def _schedule_steps(
     ca: CompiledAutomaton,
     offsets: dict[tuple[int, int], tuple[int, np.ndarray, np.ndarray]],
     nb: int,
-) -> tuple[np.ndarray, np.ndarray, int]:
+    frow_map: dict[tuple[int, int, int], int],
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
     """Stage-B core: the sorted (orow, ocol, frow, fcol, tid) step table
-    for one automaton over one staged offset map, plus ``firsts`` and the
-    real-step count.  Pure host indexing — no tile packing."""
-    fwd_lids = sorted(lid for (d, lid) in offsets if d == FWD)
-    inv_lids = sorted(lid for (d, lid) in offsets if d == INV)
+    for one automaton over one staged offset map, plus ``firsts``,
+    ``valids``, and the real-step count.  Pure host indexing — no tile
+    packing.  Each fan-in group contributes one pass per tile of its
+    label store (the any-label union store for wildcards); labels with
+    empty stores contribute nothing."""
     steps: list[tuple[int, int, int, int, int]] = []  # (orow, ocol, frow, fcol, tid)
-    for t in ca.transitions:
-        lids = (
-            [t.label_id]
-            if t.label_id >= 0
-            else (fwd_lids if t.direction == FWD else inv_lids)
-        )
+    for (dst, direction, label_id), frow in sorted(frow_map.items()):
+        if label_id >= 0:
+            lids = [label_id]
+        elif (direction, ANY_LABEL) in offsets:
+            lids = [ANY_LABEL]
+        else:  # no union store staged (e.g. a BlockedGraph without one)
+            lids = sorted(l for (d, l) in offsets if d == direction and l >= 0)
         for lid in lids:
-            ent = offsets.get((t.direction, lid))
+            ent = offsets.get((direction, lid))
             if ent is None:
                 continue  # empty label store: no edges, nothing to expand
             base, rows, cols = ent
             for j in range(len(rows)):
-                steps.append((t.dst, int(cols[j]), t.src, int(rows[j]), base + j))
+                steps.append((dst, int(cols[j]), frow, int(rows[j]), base + j))
     n_real = len(steps)
 
     covered = {(s[0], s[1]) for s in steps}
@@ -312,20 +594,22 @@ def _schedule_steps(
     if len(steps) > 1:
         same = (arr[1:, 0] == arr[:-1, 0]) & (arr[1:, 1] == arr[:-1, 1])
         firsts[1:][same] = 0
-    return arr, firsts, n_real
+    valids = (arr[:, 4] > 0).astype(np.int32)  # tile 0 = zero cover tile
+    return arr, firsts, valids, n_real
 
 
 def build_level_schedule(
     ca: CompiledAutomaton, staged: StagedGraph, q_pad: int = QPAD
 ) -> FusedLevelPlan:
     """Stage B: schedule one fused BFS level for ``ca`` over Stage-A
-    artifacts.  Wildcard transitions expand to every label's tile list of
-    their direction; labels with empty stores (no edges) contribute
-    nothing.  The returned plan *aliases* ``staged.tiles`` — zero tile
+    artifacts.  Wildcard transitions ground to the any-label union store
+    (one tile list); fan-in groups read one (possibly virtual) frontier
+    row.  The returned plan *aliases* ``staged.tiles`` — zero tile
     packing, zero device transfers of tile data."""
     BUILD_COUNTERS["level_schedule"] += 1
     nb = staged.v_pad // staged.block_size
-    arr, firsts, n_real = _schedule_steps(ca, staged.offsets, nb)
+    frow_map, union_members = fanin_frontier_rows(ca)
+    arr, firsts, valids, n_real = _schedule_steps(ca, staged.offsets, nb, frow_map)
     return FusedLevelPlan(
         n_states=ca.n_states,
         n_nodes=staged.n_nodes,
@@ -333,8 +617,10 @@ def build_level_schedule(
         block_size=staged.block_size,
         q_pad=q_pad,
         n_real_steps=n_real,
+        union_members=union_members,
         tiles=staged.tiles,
         firsts=jnp.asarray(firsts),
+        valids=jnp.asarray(valids),
         tile_ids=jnp.asarray(arr[:, 4]),
         f_rows=jnp.asarray(arr[:, 2]),
         f_cols=jnp.asarray(arr[:, 3]),
@@ -359,29 +645,55 @@ def build_level_plan(
 
 
 # ---------------------------------------------------------------------------
-# Site-sharded level plan: one padded fused grid per site, common shape
+# Site-sharded level plan: shape-bucketed per-site fused grids
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
+class PlanBucket:
+    """One shape bucket of a :class:`ShardedLevelPlan`: the member
+    sites' schedules stacked (shard_map row order, see
+    :class:`TileBucket`) and padded to the bucket's power-of-two grid
+    length ``n_steps``.  Padding steps are ``firsts=0, valids=0``
+    zero-tile references to the last output block: they keep the
+    (o_row, o_col) sort order, hit a block every schedule has already
+    initialized, and early-out in-kernel — a predicate, not a tile pass.
+    """
+
+    n_steps: int  # power-of-two padded grid length (shape class)
+    n_tiles: int  # power-of-two padded per-site tile count (shape class)
+    slots: tuple[int, ...]  # local site indices in this bucket
+    sites: tuple[int, ...]  # global site ids, row-by-row (device-major)
+    tiles: jnp.ndarray  # (axis_size * len(slots), n_tiles, B, B)
+    firsts: jnp.ndarray  # (rows, n_steps) int32 0/1
+    valids: jnp.ndarray  # (rows, n_steps) int32 0/1
+    tile_ids: jnp.ndarray  # (rows, n_steps) int32
+    f_rows: jnp.ndarray  # (rows, n_steps) int32
+    f_cols: jnp.ndarray  # (rows, n_steps) int32
+    o_rows: jnp.ndarray  # (rows, n_steps) int32
+    o_cols: jnp.ndarray  # (rows, n_steps) int32
+
+
+@dataclasses.dataclass
 class ShardedLevelPlan:
-    """Per-site fused level schedules padded to ONE common grid shape.
+    """Per-site fused level schedules, shape-bucketed.
 
-    Site ``s`` holds an arbitrary edge partition; its tile lists are built
-    from *its* edges only (:func:`stage_sharded_graph` on the site-local
-    graphs, Stage A) and scheduled per automaton (Stage B), with every
-    site's schedule padded to the max step/tile counts so a single jitted
-    program — one ``pallas_call`` per site per level — serves all sites
-    under ``shard_map`` over the site axis.
+    Site ``s`` holds an arbitrary edge partition; its tile lists are
+    built from *its* edges only (:func:`stage_sharded_graph`, Stage A)
+    and scheduled per automaton (Stage B).  Instead of padding every
+    site to one global max grid, sites are grouped into a small set of
+    power-of-two ``(n_steps, n_tiles)`` shape classes
+    (:func:`bucket_staged_sites` picks the tile class per slot; the step
+    class is the power-of-two roundup of the bucket members' longest
+    schedule) — so padding waste stops growing with site count, and one
+    ``vmap``-ped jitted program per bucket serves all of that bucket's
+    sites under ``shard_map``.
 
-    Padding steps multiply the all-zero cover tile into the *last* output
-    block with ``firsts=0``: they keep the (o_row, o_col) sort order, hit
-    a block every plan has already initialized (cover steps guarantee full
-    coverage), and accumulate exactly zero — pure no-ops on the MXU.
-
-    All leading-``n_sites`` arrays are laid out for
-    ``shard_map(in_specs=P(site_axes, ...))``: shard the site dim, keep
-    the rest replicated per device.
+    All bucket arrays are laid out for ``shard_map(in_specs=P(site_axes,
+    ...))``: shard the leading (device-major) row dim, keep the rest
+    replicated per device.  ``union_members`` is the fan-in union row
+    layout shared by every site (callers extend the frontier once per
+    level with :func:`extend_frontier`).
     """
 
     n_sites: int
@@ -390,48 +702,96 @@ class ShardedLevelPlan:
     v_pad: int
     block_size: int
     q_pad: int
-    n_steps: int  # common (padded) grid length
+    axis_size: int
+    union_members: tuple[tuple[int, ...], ...]
+    buckets: tuple[PlanBucket, ...]
     n_real_steps: tuple[int, ...]  # per site: steps carrying a real tile
-    tiles: jnp.ndarray  # (n_sites, n_tiles, B, B); index 0 = zero tile
-    firsts: jnp.ndarray  # (n_sites, n_steps) int32 0/1
-    tile_ids: jnp.ndarray  # (n_sites, n_steps) int32
-    f_rows: jnp.ndarray  # (n_sites, n_steps) int32
-    f_cols: jnp.ndarray  # (n_sites, n_steps) int32
-    o_rows: jnp.ndarray  # (n_sites, n_steps) int32
-    o_cols: jnp.ndarray  # (n_sites, n_steps) int32
+    useful_steps: int  # Σ per-site unpadded schedule lengths
+    padded_steps: int  # Σ per-bucket rows × n_steps (executed grid slots)
+
+    @property
+    def pad_waste_ratio(self) -> float:
+        return self.padded_steps / max(self.useful_steps, 1)
+
+    @property
+    def bucket_shapes(self) -> tuple[tuple[int, int, int], ...]:
+        """Per bucket: (n_steps class, n_tiles class, member rows)."""
+        return tuple(
+            (b.n_steps, b.n_tiles, len(b.sites)) for b in self.buckets
+        )
 
 
 def build_sharded_level_schedule(
-    ca: CompiledAutomaton, staged: StagedShardedGraph, q_pad: int = QPAD
+    ca: CompiledAutomaton,
+    staged: StagedShardedGraph,
+    tile_buckets: ShardedTileBuckets | None = None,
+    q_pad: int = QPAD,
+    axis_size: int = 1,
+    bucket_floor: int = BUCKET_FLOOR,
 ) -> ShardedLevelPlan:
     """Stage B: schedule one fused BFS level *per site* over the staged
-    per-site tile slabs, padded to a common step count.
+    per-site tile slabs, bucketed into power-of-two shape classes.
 
-    A site holding zero edges (or none for some label) degenerates to a
-    cover-only schedule.  The returned plan *aliases* ``staged.tiles`` —
-    the per-site packing and device transfer happened once in Stage A
-    (:func:`stage_sharded_graph`), so a new automaton signature on a hot
-    graph costs only this host-side step indexing."""
+    ``tile_buckets`` accepts the Stage-A shape buckets (e.g. from
+    :class:`repro.core.plans.GraphPlanStore`, which caches them per
+    (placement, axis_size)); without one they are built here.  A site
+    holding zero edges (or none for some label) degenerates to a
+    cover-only schedule in the smallest class.  The returned plan
+    *aliases* the bucket tile stacks — the per-site packing and device
+    transfer happened once in Stage A, so a new automaton signature on a
+    hot graph costs only this host-side step indexing."""
     BUILD_COUNTERS["sharded_level_schedule"] += 1
+    if tile_buckets is None:
+        tile_buckets = bucket_staged_sites(staged, axis_size, bucket_floor)
     nb = staged.v_pad // staged.block_size
+    frow_map, union_members = fanin_frontier_rows(ca)
     site_steps = [
-        _schedule_steps(ca, offsets, nb) for offsets in staged.site_offsets
+        _schedule_steps(ca, offsets, nb, frow_map) for offsets in staged.site_offsets
     ]
-    n_steps = max(arr.shape[0] for arr, _, _ in site_steps)
 
-    def pad_steps(arr: np.ndarray, fill: int) -> np.ndarray:
-        return np.concatenate(
-            [arr, np.full(n_steps - len(arr), fill, np.int32)]
+    def pad_steps(col: np.ndarray, n_steps: int, fill: int) -> np.ndarray:
+        return np.concatenate([col, np.full(n_steps - len(col), fill, np.int32)])
+
+    buckets = []
+    useful = sum(arr.shape[0] for arr, _, _, _ in site_steps)
+    padded = 0
+    for tb in tile_buckets.buckets:
+        max_len = max(site_steps[s][0].shape[0] for s in tb.sites)
+        # singleton buckets run at natural length — the pow2 roundup only
+        # buys shape agreement between members, and padding steps are not
+        # free (the interpreter pays most of a real step per slot)
+        n_steps = (
+            shape_class(max_len, tile_buckets.floor)
+            if len(tb.sites) > 1
+            else max_len
         )
-
-    firsts, tids, frows, fcols, orows, ocols = [], [], [], [], [], []
-    for arr, f, _ in site_steps:
-        firsts.append(pad_steps(f, 0))
-        tids.append(pad_steps(arr[:, 4], 0))  # zero cover tile
-        frows.append(pad_steps(arr[:, 2], 0))
-        fcols.append(pad_steps(arr[:, 3], 0))
-        orows.append(pad_steps(arr[:, 0], ca.n_states - 1))
-        ocols.append(pad_steps(arr[:, 1], nb - 1))
+        padded += n_steps * len(tb.sites)
+        cols = {k: [] for k in ("fi", "vl", "ti", "fr", "fc", "orw", "oc")}
+        for s in tb.sites:
+            arr, fi, vl, _ = site_steps[s]
+            cols["fi"].append(pad_steps(fi, n_steps, 0))
+            cols["vl"].append(pad_steps(vl, n_steps, 0))
+            cols["ti"].append(pad_steps(arr[:, 4], n_steps, 0))  # zero cover tile
+            cols["fr"].append(pad_steps(arr[:, 2], n_steps, 0))
+            cols["fc"].append(pad_steps(arr[:, 3], n_steps, 0))
+            cols["orw"].append(pad_steps(arr[:, 0], n_steps, ca.n_states - 1))
+            cols["oc"].append(pad_steps(arr[:, 1], n_steps, nb - 1))
+        buckets.append(
+            PlanBucket(
+                n_steps=n_steps,
+                n_tiles=tb.n_tiles,
+                slots=tb.slots,
+                sites=tb.sites,
+                tiles=tb.tiles,
+                firsts=jnp.asarray(np.stack(cols["fi"])),
+                valids=jnp.asarray(np.stack(cols["vl"])),
+                tile_ids=jnp.asarray(np.stack(cols["ti"])),
+                f_rows=jnp.asarray(np.stack(cols["fr"])),
+                f_cols=jnp.asarray(np.stack(cols["fc"])),
+                o_rows=jnp.asarray(np.stack(cols["orw"])),
+                o_cols=jnp.asarray(np.stack(cols["oc"])),
+            )
+        )
     return ShardedLevelPlan(
         n_sites=staged.n_sites,
         n_states=ca.n_states,
@@ -439,15 +799,12 @@ def build_sharded_level_schedule(
         v_pad=staged.v_pad,
         block_size=staged.block_size,
         q_pad=q_pad,
-        n_steps=n_steps,
-        n_real_steps=tuple(n_real for _, _, n_real in site_steps),
-        tiles=staged.tiles,
-        firsts=jnp.asarray(np.stack(firsts)),
-        tile_ids=jnp.asarray(np.stack(tids)),
-        f_rows=jnp.asarray(np.stack(frows)),
-        f_cols=jnp.asarray(np.stack(fcols)),
-        o_rows=jnp.asarray(np.stack(orows)),
-        o_cols=jnp.asarray(np.stack(ocols)),
+        axis_size=tile_buckets.axis_size,
+        union_members=union_members,
+        buckets=tuple(buckets),
+        n_real_steps=tuple(n_real for _, _, _, n_real in site_steps),
+        useful_steps=useful,
+        padded_steps=padded,
     )
 
 
@@ -456,9 +813,12 @@ def build_sharded_level_plan(
     site_graphs: list[LabeledGraph] | StagedShardedGraph,
     block_size: int = 128,
     q_pad: int = QPAD,
+    axis_size: int = 1,
+    bucket_floor: int = BUCKET_FLOOR,
 ) -> ShardedLevelPlan:
-    """One-shot wrapper: stage every site (Stage A) then schedule (Stage
-    B).  Pass a :class:`StagedShardedGraph` to skip straight to Stage B —
+    """One-shot wrapper: stage every site (Stage A), bucket the slabs
+    into shape classes, then schedule (Stage B).  Pass a
+    :class:`StagedShardedGraph` to skip straight to bucketing + Stage B —
     that is what :class:`repro.core.plans.GraphPlanStore` hands the
     sharded executor builder, making warm builds pack zero tiles."""
     staged = (
@@ -466,16 +826,26 @@ def build_sharded_level_plan(
         if isinstance(site_graphs, StagedShardedGraph)
         else stage_sharded_graph(site_graphs, block_size)
     )
-    return build_sharded_level_schedule(ca, staged, q_pad)
+    return build_sharded_level_schedule(
+        ca, staged, q_pad=q_pad, axis_size=axis_size, bucket_floor=bucket_floor
+    )
 
 
-@partial(jax.jit, static_argnames=("block_size", "q_pad", "interpret"))
+@partial(
+    jax.jit,
+    static_argnames=(
+        "block_size", "q_pad", "interpret", "union_members", "n_states"
+    ),
+)
 def _fused_expand(
-    frontier, tiles, firsts, tids, frows, fcols, orows, ocols, *, block_size, q_pad, interpret
+    frontier, tiles, firsts, valids, tids, frows, fcols, orows, ocols,
+    *, block_size, q_pad, interpret, union_members, n_states,
 ):
+    fre = extend_frontier(frontier, union_members, n_states, q_pad)
     counts = fused_level_blocks(
-        frontier, tiles, firsts, tids, frows, fcols, orows, ocols,
+        fre, tiles, firsts, valids, tids, frows, fcols, orows, ocols,
         block_size, q_pad, interpret=interpret,
+        n_out_rows=n_states * q_pad,
     )
     return jnp.minimum(counts, 1.0)
 
@@ -487,16 +857,22 @@ def expand_level_fused(
 ) -> jnp.ndarray:
     """One BFS level over all grounded transitions — ONE pallas_call."""
     return _fused_expand(
-        frontier, plan.tiles, plan.firsts, plan.tile_ids,
+        frontier, plan.tiles, plan.firsts, plan.valids, plan.tile_ids,
         plan.f_rows, plan.f_cols, plan.o_rows, plan.o_cols,
         block_size=plan.block_size, q_pad=plan.q_pad, interpret=interpret,
+        union_members=plan.union_members, n_states=plan.n_states,
     )
 
 
-@partial(jax.jit, static_argnames=("block_size", "q_pad", "max_levels", "interpret"))
+@partial(
+    jax.jit,
+    static_argnames=(
+        "block_size", "q_pad", "max_levels", "interpret", "union_members", "n_states"
+    ),
+)
 def _reach_fixpoint(
-    frontier0, tiles, firsts, tids, frows, fcols, orows, ocols,
-    *, block_size, q_pad, max_levels, interpret,
+    frontier0, tiles, firsts, valids, tids, frows, fcols, orows, ocols,
+    *, block_size, q_pad, max_levels, interpret, union_members, n_states,
 ):
     """Device-resident BFS fixpoint: lax.while_loop over fused levels.
 
@@ -510,9 +886,11 @@ def _reach_fixpoint(
 
     def body(state):
         visited, frontier, lev = state
+        fre = extend_frontier(frontier, union_members, n_states, q_pad)
         counts = fused_level_blocks(
-            frontier, tiles, firsts, tids, frows, fcols, orows, ocols,
+            fre, tiles, firsts, valids, tids, frows, fcols, orows, ocols,
             block_size, q_pad, interpret=interpret,
+            n_out_rows=n_states * q_pad,
         )
         nxt = jnp.minimum(counts, 1.0)
         new = nxt * (1.0 - visited)  # exact on {0,1} floats
@@ -532,10 +910,11 @@ def reach_fixpoint(
 ) -> jnp.ndarray:
     """Visited product states (same layout as ``frontier0``) at fixpoint."""
     return _reach_fixpoint(
-        frontier0, plan.tiles, plan.firsts, plan.tile_ids,
+        frontier0, plan.tiles, plan.firsts, plan.valids, plan.tile_ids,
         plan.f_rows, plan.f_cols, plan.o_rows, plan.o_cols,
         block_size=plan.block_size, q_pad=plan.q_pad,
         max_levels=max_levels, interpret=interpret,
+        union_members=plan.union_members, n_states=plan.n_states,
     )
 
 

@@ -4,8 +4,10 @@ Dumb by design — the service records one :class:`QueryRecord` per request
 and :meth:`ServiceMetrics.summary` reduces them into the stable schema the
 throughput benchmark serializes (queries/sec, p50/p95 latency, cache hit
 rates, per-strategy counts, symbol totals, plus the two-stage-compilation
-counters: executor-cache and plan-store hit/miss rates pushed by the
-service via :meth:`ServiceMetrics.set_cache_stats` each flush).
+counters: executor-cache and plan-store hit/miss rates, and the sharded
+plans' grid-step padding accounting ``plan_pad_waste``, pushed by the
+service via :meth:`ServiceMetrics.set_cache_stats` each flush; all three
+are zeroed placeholders with the full key sets before the first flush).
 """
 
 from __future__ import annotations
@@ -38,6 +40,14 @@ def _empty_plan_store_stats() -> dict:
     return {"size": 0, "hits": 0, "misses": 0, "hit_rate": 0.0, "evictions": 0}
 
 
+def _empty_pad_waste_stats() -> dict:
+    # GraphPlanStore.pad_stats() key set: grid-step padding accounting
+    # over every sharded plan built against the store, plus per-bucket
+    # executed-step counters keyed "<n_steps>x<n_tiles>"
+    return {"useful_steps": 0, "padded_steps": 0, "pad_waste_ratio": 0.0,
+            "bucket_grid_steps": {}}
+
+
 class ServiceMetrics:
     def __init__(self) -> None:
         self.records: list[QueryRecord] = []
@@ -51,18 +61,25 @@ class ServiceMetrics:
         self._cache_stats: dict[str, dict] = {
             "exec_cache": _empty_exec_cache_stats(),
             "plan_store": _empty_plan_store_stats(),
+            "plan_pad_waste": _empty_pad_waste_stats(),
         }
 
     def set_cache_stats(
-        self, exec_cache: dict | None = None, plan_store: dict | None = None
+        self,
+        exec_cache: dict | None = None,
+        plan_store: dict | None = None,
+        plan_pad_waste: dict | None = None,
     ) -> None:
         """Install the current executor-cache / plan-store hit/miss
-        counters (the service pushes these every flush, so summaries and
-        the throughput benchmark see live two-stage-compilation rates)."""
+        counters and the sharded plans' grid-step padding accounting
+        (the service pushes these every flush, so summaries and the
+        throughput benchmark see live two-stage-compilation rates)."""
         if exec_cache is not None:
             self._cache_stats["exec_cache"] = dict(exec_cache)
         if plan_store is not None:
             self._cache_stats["plan_store"] = dict(plan_store)
+        if plan_pad_waste is not None:
+            self._cache_stats["plan_pad_waste"] = dict(plan_pad_waste)
 
     def record(self, rec: QueryRecord) -> None:
         now = time.perf_counter()
@@ -97,6 +114,7 @@ class ServiceMetrics:
             "strategies": strategies,
             "exec_cache": dict(self._cache_stats["exec_cache"]),
             "plan_store": dict(self._cache_stats["plan_store"]),
+            "plan_pad_waste": dict(self._cache_stats["plan_pad_waste"]),
         }
         if extra:
             out.update(extra)

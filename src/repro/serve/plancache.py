@@ -16,7 +16,8 @@ query's life:
 * :class:`ExecutorCache` — a TWO-LEVEL LRU mirroring two-stage
   compilation (see :mod:`repro.core.plans`): the outer key is the
   *graph key* ``(stats epoch, placement/graph identity, backend, block
-  size)`` — everything Stage A depends on — and the inner key is the
+  size, shape-bucket id)`` — everything Stage A depends on, the bucket
+  id being the sharded backend's tile-class layout — and the inner key is the
   *automaton signature* (fused transition runs + start/accepting states
   + n_nodes + mesh).  Builds route Stage A through the cache's shared
   :class:`~repro.core.plans.GraphPlanStore`, so distinct signatures on
@@ -291,12 +292,24 @@ class ExecutorCache:
         block_size: int,
         graph: Any = None,
         placement: Any = None,
+        bucket_id: tuple | None = None,
     ) -> tuple:
         """Everything Stage A depends on: the graph-stats epoch, the
         data's identity (the placement when the backend is site-aware,
-        else the global graph), and the staging parameters."""
+        else the global graph), the staging parameters, and — for the
+        sharded backend — the shape-bucket descriptor
+        (:attr:`repro.kernels.frontier.ops.ShardedTileBuckets.bucket_id`):
+        two executors over the same placement but different bucket
+        layouts (axis size, floor, tile classes) bake different tile
+        stacks into their jitted programs and must not alias."""
         anchor = placement if placement is not None else graph
-        return (stats_epoch, id(anchor) if anchor is not None else None, backend, block_size)
+        return (
+            stats_epoch,
+            id(anchor) if anchor is not None else None,
+            backend,
+            block_size,
+            bucket_id,
+        )
 
     def _evict(self, key: tuple) -> None:
         entry = self._lru.pop(key)
@@ -324,12 +337,13 @@ class ExecutorCache:
         interpret: bool | None = None,
         placement: Any = None,
         stats_epoch: int = 0,
+        bucket_floor: int | None = None,
     ) -> tuple[tuple, Callable]:
         """``signature`` accepts the precomputed key (the service computes
         it once per request during planning) to skip re-deriving the
         transition runs here.  The backend extras (``graph``,
         ``replication_factor``, ``block_size``, ``interpret``,
-        ``placement``) are only consulted by the fused
+        ``placement``, ``bucket_floor``) are only consulted by the fused
         ``frontier_kernel``/``frontier_kernel_sharded`` backends;
         ``stats_epoch`` scopes the Stage-A artifacts the build reuses."""
         sig = (
@@ -339,7 +353,23 @@ class ExecutorCache:
                 ca, n_nodes, mesh, site_axes, batch_axis, max_levels, backend, block_size
             )
         )
-        gkey = self.graph_key(stats_epoch, backend, block_size, graph, placement)
+        bucket_id = None
+        if backend == "frontier_kernel_sharded" and placement is not None:
+            # the sharded executor's tiles are laid out by its shape
+            # buckets — resolve the Stage-A bucket descriptor (a cheap
+            # store hit when the placement is hot) so it joins the key
+            from repro.kernels.frontier import ops as fops
+
+            floor = bucket_floor if bucket_floor is not None else fops.BUCKET_FLOOR
+            axis_size = 1
+            for ax in site_axes:
+                axis_size *= int(mesh.shape[ax])
+            bucket_id = self.plan_store.tile_buckets(
+                placement, block_size, axis_size, epoch=stats_epoch, floor=floor
+            ).bucket_id
+        gkey = self.graph_key(
+            stats_epoch, backend, block_size, graph, placement, bucket_id
+        )
         key = (gkey, sig)
         entry = self._lru.get(key)
         if entry is not None:
@@ -352,6 +382,7 @@ class ExecutorCache:
             backend=backend, graph=graph, replication_factor=replication_factor,
             block_size=block_size, interpret=interpret, placement=placement,
             plan_store=self.plan_store, stats_epoch=stats_epoch,
+            bucket_floor=bucket_floor,
         )
         self._lru[key] = _ExecEntry(
             graph_key=gkey, sig=sig, fn=fn,

@@ -71,6 +71,9 @@ class ServeConfig:
     # matrix; the fused backends' tile block size below
     s2_backend: str = "reference"
     s2_block_size: int = 128
+    # smallest power-of-two shape class for the sharded backend's
+    # bucketed grids (see repro.kernels.frontier.ops.BUCKET_FLOOR)
+    s2_bucket_floor: int = 8
     # S1 coalescing: weight FFD bins by the estimated per-label D_s1
     # (sample label counts) instead of raw label popcount
     s1_cost_weighted: bool = True
@@ -315,6 +318,7 @@ class QueryService:
                     replication_factor=self.placement.replication_factor,
                     block_size=cfg.s2_block_size, placement=self.placement,
                     stats_epoch=self.stats_epoch,
+                    bucket_floor=cfg.s2_bucket_floor,
                 )
 
                 def execute(starts, exemplar):
@@ -427,7 +431,9 @@ class QueryService:
             self._run_s1(s1)
         # surface the two-stage-compilation counters in the flush stats
         self.metrics.set_cache_stats(
-            exec_cache=self.exec_cache.stats(), plan_store=self.plan_store.stats()
+            exec_cache=self.exec_cache.stats(),
+            plan_store=self.plan_store.stats(),
+            plan_pad_waste=self.plan_store.pad_stats(),
         )
         return [r.ticket for r in pending]
 
@@ -435,7 +441,9 @@ class QueryService:
 
     def summary(self) -> dict:
         self.metrics.set_cache_stats(
-            exec_cache=self.exec_cache.stats(), plan_store=self.plan_store.stats()
+            exec_cache=self.exec_cache.stats(),
+            plan_store=self.plan_store.stats(),
+            plan_pad_waste=self.plan_store.pad_stats(),
         )
         return self.metrics.summary(
             extra={

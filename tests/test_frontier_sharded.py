@@ -1,8 +1,10 @@
 """Site-sharded fused frontier backend: bit-exact oracle match vs the
 global ``frontier_kernel`` backend and the reference PAA on 1 simulated
-device, per-site §4.2 cost meters summing to the host meter, the padded
-common-grid plan invariants, and an 8-device subprocess run (reusing the
-``test_multidevice`` harness pattern)."""
+device, per-site §4.2 cost meters summing to the host meter, the
+shape-bucketed plan invariants (power-of-two multi-member classes,
+singleton natural shapes, in-kernel-skippable padding tails), and an
+8-device subprocess run (reusing the ``test_multidevice`` harness
+pattern)."""
 
 import subprocess
 import sys
@@ -123,37 +125,67 @@ def test_site_aware_cost_of_uses_measured_sum(setup):
     assert cost_model.cost_of(net, meas) == pytest.approx(bc + 90.0)
 
 
-def test_sharded_plan_common_grid_invariants(setup):
-    """Every site's padded schedule shares one grid shape; padding steps
-    are firsts=0 zero-tile no-ops on the last output block, and each
-    site's real prefix still covers every (dst_state, block_col) block."""
+def test_sharded_plan_bucket_invariants(setup):
+    """Shape-bucketed plans: bucket assignment is deterministic, shape
+    classes of multi-member buckets are powers of two (a singleton
+    bucket has nothing to unify and keeps its natural shape), every
+    site's useful steps fit its bucket, padding steps are
+    valids=0/firsts=0 zero-tile no-ops on the last output block, and
+    each site's real prefix still covers every (dst_state, block_col)
+    block."""
     g, _, _, _ = setup
     placement = _partition(g, 3, seed=2)
     ca = paa.compile_query("l0 (l1|l2)* l0", g)
     site_graphs = [placement.local_graph(s) for s in range(3)]
     plan = build_sharded_level_plan(ca, site_graphs, block_size=8)
+    plan2 = build_sharded_level_plan(ca, site_graphs, block_size=8)
     nb = plan.v_pad // plan.block_size
-    assert plan.tiles.shape[0] == plan.firsts.shape[0] == 3
-    assert plan.firsts.shape[1] == plan.n_steps
-    orows, ocols = np.asarray(plan.o_rows), np.asarray(plan.o_cols)
-    tids, firsts = np.asarray(plan.tile_ids), np.asarray(plan.firsts)
-    tiles = np.asarray(plan.tiles)
-    assert (tiles[:, 0] == 0).all()  # index 0 is the zero cover tile
-    for s in range(3):
-        key = orows[s].astype(np.int64) * nb + ocols[s]
-        assert (np.diff(key) >= 0).all(), s  # sorted incl. the padding tail
-        blocks = set(zip(orows[s].tolist(), ocols[s].tolist()))
-        assert blocks == {(q, c) for q in range(ca.n_states) for c in range(nb)}, s
-        assert firsts[s].sum() == ca.n_states * nb, s
-        # padding steps (this site's schedule tail) multiply the zero
-        # cover tile into the last output block with firsts=0
-        own_len = int(
-            build_sharded_level_plan(ca, [site_graphs[s]], block_size=8).n_steps
-        )
-        assert (tids[s][own_len:] == 0).all(), s
-        assert (firsts[s][own_len:] == 0).all(), s
-        assert (orows[s][own_len:] == ca.n_states - 1).all(), s
-        assert (ocols[s][own_len:] == nb - 1).all(), s
+
+    # deterministic assignment: two builds agree bucket-for-bucket
+    assert plan.bucket_shapes == plan2.bucket_shapes
+    assert [b.sites for b in plan.buckets] == [b.sites for b in plan2.buckets]
+    assert plan.padded_steps >= plan.useful_steps > 0
+    assert plan.pad_waste_ratio >= 1.0
+
+    # the fixture must exercise both shapes: shared (pow2) and singleton
+    assert any(len(b.sites) > 1 for b in plan.buckets)
+
+    seen_sites = []
+    for b in plan.buckets:
+        if len(b.sites) > 1:  # shared program: power-of-two classes
+            assert b.n_steps & (b.n_steps - 1) == 0
+            assert b.n_tiles & (b.n_tiles - 1) == 0
+        assert b.firsts.shape == (len(b.sites), b.n_steps)
+        assert b.tiles.shape[:2] == (len(b.sites), b.n_tiles)
+        assert (np.asarray(b.tiles)[:, 0] == 0).all()  # zero cover tile
+        orows, ocols = np.asarray(b.o_rows), np.asarray(b.o_cols)
+        tids, firsts = np.asarray(b.tile_ids), np.asarray(b.firsts)
+        valids = np.asarray(b.valids)
+        for row, s in enumerate(b.sites):
+            seen_sites.append(s)
+            key = orows[row].astype(np.int64) * nb + ocols[row]
+            assert (np.diff(key) >= 0).all(), s  # sorted incl. padding tail
+            blocks = set(zip(orows[row].tolist(), ocols[row].tolist()))
+            assert blocks == {(q, c) for q in range(ca.n_states) for c in range(nb)}, s
+            assert firsts[row].sum() == ca.n_states * nb, s
+            # the site's own (unpadded) schedule fits its bucket; the
+            # padding tail multiplies the zero cover tile into the last
+            # output block with firsts=0 AND valids=0 (in-kernel skip)
+            own_plan = build_sharded_level_plan(ca, [site_graphs[s]], block_size=8)
+            own_len = int(own_plan.useful_steps)
+            assert own_len <= b.n_steps, s
+            if len(b.sites) == 1:  # singleton: natural shape, no roundup
+                assert b.n_steps == own_len, s
+                assert b.n_tiles == own_plan.buckets[0].n_tiles, s
+                assert own_plan.pad_waste_ratio == 1.0, s
+            assert (tids[row][own_len:] == 0).all(), s
+            assert (firsts[row][own_len:] == 0).all(), s
+            assert (valids[row][own_len:] == 0).all(), s
+            assert (orows[row][own_len:] == ca.n_states - 1).all(), s
+            assert (ocols[row][own_len:] == nb - 1).all(), s
+            # valid steps are exactly the site's real-tile steps
+            assert valids[row].sum() == plan.n_real_steps[s], s
+    assert sorted(seen_sites) == [0, 1, 2]  # every site in exactly one bucket
 
 
 def test_sharded_requires_placement_and_divisible_sites(setup):

@@ -189,10 +189,15 @@ def test_staged_schedules_match_single_stage_plans(setup):
     site_graphs = [placement.local_graph(s) for s in range(placement.n_sites)]
     s_one = fops.build_sharded_level_plan(ca, site_graphs, 8)
     s_two = fops.build_sharded_level_schedule(ca, fops.stage_sharded_graph(site_graphs, 8))
-    assert s_one.n_steps == s_two.n_steps
+    assert s_one.bucket_shapes == s_two.bucket_shapes
     assert s_one.n_real_steps == s_two.n_real_steps
-    for f in fields:
-        assert (np.asarray(getattr(s_one, f)) == np.asarray(getattr(s_two, f))).all(), f
+    sharded_fields = ("valids",) + fields
+    for b_one, b_two in zip(s_one.buckets, s_two.buckets):
+        assert b_one.sites == b_two.sites and b_one.slots == b_two.slots
+        for f in sharded_fields:
+            assert (
+                np.asarray(getattr(b_one, f)) == np.asarray(getattr(b_two, f))
+            ).all(), f
 
 
 def test_label_degree_vectors_match_symbol_degrees(setup):
