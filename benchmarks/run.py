@@ -24,36 +24,53 @@ import traceback
 
 KNOWN = [
     "table1", "table2", "fig2", "fig3", "fig4", "scenario6", "roofline",
-    "serve", "frontier", "dist", "plans",
+    "serve", "serve_async", "frontier", "dist", "plans",
 ]
 
-# --regress gate: a fresh `dist` run may not be slower than the
-# checked-in baseline by more than this factor on any fixpoint-ms metric
+# --regress gate: a fresh run may not be slower than the checked-in
+# baseline by more than this factor on any gated latency metric
 # (latency-noise headroom included; step counts are exact and need no
-# tolerance, so latency is the regression signal)
+# tolerance, so latency is the regression signal).  Gated metrics:
+#   dist         — every fixpoint_ms* leaf of BENCH_frontier_sharded.json
+#   serve_async  — every p99_ms leaf of BENCH_serve_async.json OUTSIDE
+#                  the `overload` block (2x offered load sheds by
+#                  design; its tail is rejection-shaped, not a signal)
 REGRESS_FACTOR = 1.3
 DIST_JSON = "BENCH_frontier_sharded.json"
+SERVE_ASYNC_JSON = "BENCH_serve_async.json"
 
 
-def _collect_ms(d: dict, prefix: str = "") -> dict[str, float]:
-    """Flatten every ``fixpoint_ms*`` leaf of a BENCH json (nested site
-    sections included) into dotted-path → milliseconds."""
+def _collect_ms(
+    d: dict, key_prefix: str = "fixpoint_ms", skip: str | None = None, prefix: str = ""
+) -> dict[str, float]:
+    """Flatten every ``<key_prefix>*`` leaf of a BENCH json (nested
+    sections included) into dotted-path → milliseconds, skipping any
+    subtree named ``skip``."""
     out: dict[str, float] = {}
     for k, v in d.items():
+        if k == skip:
+            continue
         path = f"{prefix}{k}"
         if isinstance(v, dict):
-            out.update(_collect_ms(v, path + "."))
-        elif isinstance(k, str) and k.startswith("fixpoint_ms") and isinstance(
+            out.update(_collect_ms(v, key_prefix, skip, path + "."))
+        elif isinstance(k, str) and k.startswith(key_prefix) and isinstance(
             v, (int, float)
         ):
             out[path] = float(v)
     return out
 
 
-def check_regressions(baseline: dict, fresh: dict, factor: float = REGRESS_FACTOR):
-    """Compare every fixpoint-ms metric of a fresh run against the
+def check_regressions(
+    baseline: dict,
+    fresh: dict,
+    factor: float = REGRESS_FACTOR,
+    key_prefix: str = "fixpoint_ms",
+    skip: str | None = None,
+):
+    """Compare every gated latency metric of a fresh run against the
     checked-in baseline; returns (csv rows, regressed metric names)."""
-    base_ms, new_ms = _collect_ms(baseline), _collect_ms(fresh)
+    base_ms = _collect_ms(baseline, key_prefix, skip)
+    new_ms = _collect_ms(fresh, key_prefix, skip)
     rows, failed = [], []
     for key, old in sorted(base_ms.items()):
         new = new_ms.get(key)
@@ -76,9 +93,10 @@ def main() -> None:
     ap.add_argument(
         "--regress", action="store_true",
         help=(
-            "after the `dist` subset, compare every fixpoint-ms metric "
-            f"against the checked-in {DIST_JSON} and exit non-zero on a "
-            f"> {REGRESS_FACTOR}x slowdown"
+            "after the run, compare the gated subsets against their "
+            f"checked-in baselines ({DIST_JSON} fixpoint-ms for `dist`, "
+            f"{SERVE_ASYNC_JSON} p99-ms for `serve_async`) and exit "
+            f"non-zero on a > {REGRESS_FACTOR}x slowdown"
         ),
     )
     args = ap.parse_args()
@@ -87,15 +105,25 @@ def main() -> None:
         ap.error(f"unknown benchmark(s) {sorted(unknown)}; choose from {KNOWN}")
     selected = set(args.names) if args.names else set(KNOWN)
 
-    baseline = None
+    # (name, baseline json, leaf-key prefix, skipped subtree)
+    gates = [
+        ("dist", DIST_JSON, "fixpoint_ms", None),
+        ("serve_async", SERVE_ASYNC_JSON, "p99_ms", "overload"),
+    ]
+    baselines: dict[str, dict] = {}
     if args.regress:
-        if "dist" not in selected:
-            ap.error("--regress gates the `dist` subset; include it in names")
-        try:
-            with open(DIST_JSON) as f:
-                baseline = json.load(f)  # snapshot BEFORE the run overwrites it
-        except FileNotFoundError:
-            ap.error(f"--regress needs a checked-in {DIST_JSON} baseline")
+        gated = [g for g in gates if g[0] in selected]
+        if not gated:
+            ap.error(
+                "--regress gates the `dist` and `serve_async` subsets; "
+                "include at least one in names"
+            )
+        for name, path, _, _ in gated:
+            try:
+                with open(path) as f:
+                    baselines[name] = json.load(f)  # snapshot BEFORE the run overwrites it
+            except FileNotFoundError:
+                ap.error(f"--regress needs a checked-in {path} baseline")
 
     from benchmarks import (
         fig2_costs,
@@ -106,6 +134,7 @@ def main() -> None:
         plan_store,
         roofline,
         scenario6,
+        serve_async,
         serve_throughput,
         table1_complexity,
         table2_queries,
@@ -120,6 +149,7 @@ def main() -> None:
         ("scenario6", scenario6),
         ("roofline", roofline),
         ("serve", serve_throughput),
+        ("serve_async", serve_async),
         ("frontier", frontier_level),
         ("dist", frontier_sharded),
         ("plans", plan_store),
@@ -138,21 +168,28 @@ def main() -> None:
             print(f"{name},ERROR")
         print(f"# {name} took {time.time() - t0:.1f}s", flush=True)
 
-    if baseline is not None:
+    if baselines:
         print("# ==== regress " + "=" * 50, flush=True)
         print("regress,metric,baseline_ms,fresh_ms,ratio,status")
-        with open(DIST_JSON) as f:
-            fresh = json.load(f)
-        rows, failed = check_regressions(baseline, fresh)
-        for row in rows:
-            print(row)
-        if failed:
+        all_failed: list[str] = []
+        for name, path, key_prefix, skip in gates:
+            if name not in baselines:
+                continue
+            with open(path) as f:
+                fresh = json.load(f)
+            rows, failed = check_regressions(
+                baselines[name], fresh, key_prefix=key_prefix, skip=skip
+            )
+            for row in rows:
+                print(row)
+            all_failed.extend(f"{name}:{m}" for m in failed)
+        if all_failed:
             print(
-                f"regress,FAIL,{len(failed)} metric(s) slower than "
-                f"{REGRESS_FACTOR}x baseline: {';'.join(failed)}"
+                f"regress,FAIL,{len(all_failed)} metric(s) slower than "
+                f"{REGRESS_FACTOR}x baseline: {';'.join(all_failed)}"
             )
             sys.exit(1)
-        print(f"regress,OK,every fixpoint-ms within {REGRESS_FACTOR}x of baseline")
+        print(f"regress,OK,every gated latency metric within {REGRESS_FACTOR}x of baseline")
 
 
 if __name__ == "__main__":

@@ -190,6 +190,23 @@ def decide_strategy(
     )
 
 
+def forecast_cost(plan: QueryPlan, strategy: str | None = None) -> float:
+    """The plan's network-symbol forecast for ``strategy`` (default: the
+    plan's own choice) — the serve layer's admission and batching-window
+    sizing signal.
+
+    This is the §4 cost model's *expected traffic* for the request, in
+    symbols, already at the decision quantile and with any calibration
+    scales the caller applied in :func:`decide_strategy`.  An async
+    batcher converts it to seconds with an observed secs-per-symbol EWMA
+    (see ``repro.serve.aio``): expensive S2 fixpoints get a window that
+    amortizes, cheap S1 streams flush almost immediately."""
+    s = strategy or plan.choice.strategy
+    if s not in plan.forecast_symbols:
+        s = plan.choice.strategy
+    return float(plan.forecast_symbols[s])
+
+
 def plan_query(
     query: str,
     sample: LabeledGraph,

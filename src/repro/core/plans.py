@@ -232,6 +232,41 @@ class GraphPlanStore:
             lambda: label_degree_vectors(site_graphs, n_labels, v_pad),
         )
 
+    # -- persistence hooks (see repro.serve.persist) ------------------------
+
+    def export_entries(self, anchor: Any) -> list[tuple[tuple, Any, int]]:
+        """Every entry anchored to ``anchor`` as ``(portable_key,
+        artifact, epoch)``.
+
+        Every store key has the layout ``(kind, id(anchor), epoch,
+        *rest)``; the portable key strips the two process-local slots —
+        ``(kind, *rest)`` — so a snapshot written by one process can be
+        re-keyed against a structurally identical placement object (and
+        a fresh stats epoch) in another.  The serializer validates
+        structural identity with a content fingerprint; see
+        :mod:`repro.serve.persist`."""
+        out = []
+        for key, (a, v, ep) in self._lru.items():
+            if a is anchor:
+                out.append(((key[0], *key[3:]), v, ep))
+        return out
+
+    def install_entry(
+        self, portable_key: tuple, anchor: Any, epoch: int, artifact: Any
+    ) -> None:
+        """Install one restored Stage-A artifact under ``anchor`` at
+        ``epoch`` (the inverse of :meth:`export_entries`: the
+        ``id(anchor)`` and epoch slots are re-inserted after the kind).
+        Counts as neither hit nor miss — restores are warm-start
+        seeding, not lookups."""
+        kind, *rest = portable_key
+        key = (kind, id(anchor), epoch) + tuple(rest)
+        self._lru[key] = (anchor, artifact, epoch)
+        self._lru.move_to_end(key)
+        while len(self._lru) > self.maxsize:
+            self._lru.popitem(last=False)
+            self.evictions += 1
+
     # -- invalidation -------------------------------------------------------
 
     def invalidate_epoch(self, keep_epoch: int) -> int:

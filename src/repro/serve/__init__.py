@@ -2,12 +2,27 @@
 
 Turns the paper's one-shot §6 planning workflow into a runtime that can
 sustain a request stream: plan caching over normalized query classes,
-signature-batched execution, and online cost-feedback recalibration.
+signature-batched execution, and online cost-feedback recalibration —
+plus the async multi-tenant front end (`repro.serve.aio`: SLO-aware
+admission, adaptive batching windows, explicit backpressure) and Stage-A
+plan-cache persistence for warm restarts (`repro.serve.persist`).
 See README.md in this directory for the architecture.
 """
 
+from repro.serve.aio import (
+    AdmissionRejected,
+    AioConfig,
+    AsyncQueryService,
+    TokenBucket,
+)
 from repro.serve.feedback import Calibrator, CalibrationFactors, label_class_key
-from repro.serve.metrics import QueryRecord, ServiceMetrics
+from repro.serve.metrics import (
+    SLO_CLASSES,
+    LatencyHistogram,
+    QueryRecord,
+    ServiceMetrics,
+)
+from repro.serve.persist import load_stage_a, placement_fingerprint, save_stage_a
 from repro.serve.plancache import (
     ExecutorCache,
     PlanCache,
@@ -23,18 +38,27 @@ from repro.serve.service import (
 )
 
 __all__ = [
+    "AdmissionRejected",
+    "AioConfig",
     "Answers",
+    "AsyncQueryService",
     "Calibrator",
     "CalibrationFactors",
     "ExecutorCache",
+    "LatencyHistogram",
     "PlanCache",
     "QueryRecord",
     "QueryService",
+    "SLO_CLASSES",
     "ServeConfig",
     "ServiceMetrics",
     "ServiceOverloaded",
     "Ticket",
+    "TokenBucket",
     "automaton_signature",
     "canonical_key",
     "label_class_key",
+    "load_stage_a",
+    "placement_fingerprint",
+    "save_stage_a",
 ]

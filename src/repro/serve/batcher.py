@@ -47,6 +47,17 @@ def bucket_size(n: int, multiple: int = 1, max_batch: int = 1024) -> int:
     return min(b * m, cap)
 
 
+def lane_fill_target(max_batch: int, multiple: int = 1) -> int:
+    """How many queued starts fill one executor call — the async
+    batching lane's *fill* trigger (``repro.serve.aio``).
+
+    This is the largest admissible bucket (:func:`bucket_size` of
+    ``max_batch``): once a signature lane holds this many starts, the
+    padded batch is full and waiting out the rest of the window buys no
+    amortization, so the lane flushes immediately."""
+    return bucket_size(max_batch, multiple, max_batch)
+
+
 def pad_starts(starts: np.ndarray, size: int) -> np.ndarray:
     """Pad a start batch to ``size`` by repeating the first entry; padded
     rows are computed and discarded (answers are per-row)."""

@@ -8,6 +8,13 @@ counters: executor-cache and plan-store hit/miss rates, and the sharded
 plans' grid-step padding accounting ``plan_pad_waste``, pushed by the
 service via :meth:`ServiceMetrics.set_cache_stats` each flush; all three
 are zeroed placeholders with the full key sets before the first flush).
+
+The async runtime adds one more stable block, ``aio`` (queue depth and
+admission accept/reject counters per SLO class, batch-window fill
+accounting, and a fixed-bucket :class:`LatencyHistogram` per class so
+p50/p99/p999 derive from counts without post-processing), pushed via
+:meth:`ServiceMetrics.set_aio_stats` and zero-initialized with the full
+key set for sync-only services.
 """
 
 from __future__ import annotations
@@ -29,6 +36,102 @@ class QueryRecord:
     unicast_symbols: float
     plan_cache_hit: bool
     exec_batch_size: int  # padded batch the request rode in (S2), or 1
+
+
+# the async runtime's SLO classes (see repro.serve.aio): latency-
+# sensitive requests ride a short-window, shallow queue; throughput
+# requests amortize in bigger batches behind a deeper one
+SLO_CLASSES = ("latency", "throughput")
+
+# fixed upper bucket edges (ms) of the latency histogram — log-spaced so
+# p50/p99/p999 derive from the counts alone, stable so dashboards and
+# the --regress gate never see a schema change when traffic does
+LATENCY_BUCKET_EDGES_MS = (
+    0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0,
+    500.0, 1000.0, 2000.0, 5000.0, 10000.0,
+)
+
+
+class LatencyHistogram:
+    """Fixed-bucket latency histogram: O(1) per observation, percentiles
+    by cumulative-count walk with linear interpolation inside the bucket
+    — no per-request sample list to post-process.  The last bucket is an
+    unbounded overflow; its percentile reports the last finite edge."""
+
+    def __init__(self, edges_ms: tuple[float, ...] = LATENCY_BUCKET_EDGES_MS):
+        self.edges_ms = tuple(float(e) for e in edges_ms)
+        self.counts = np.zeros(len(self.edges_ms) + 1, np.int64)
+
+    def observe(self, latency_s: float) -> None:
+        ms = latency_s * 1e3
+        idx = int(np.searchsorted(self.edges_ms, ms, side="left"))
+        self.counts[idx] += 1
+
+    @property
+    def n(self) -> int:
+        return int(self.counts.sum())
+
+    def percentile(self, q: float) -> float:
+        """The q-quantile in ms, interpolated within its bucket."""
+        n = self.n
+        if n == 0:
+            return 0.0
+        rank = q * n
+        cum = 0
+        for i, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            if cum + c >= rank:
+                lo = self.edges_ms[i - 1] if i > 0 else 0.0
+                hi = self.edges_ms[i] if i < len(self.edges_ms) else self.edges_ms[-1]
+                frac = (rank - cum) / c
+                return float(lo + (hi - lo) * min(max(frac, 0.0), 1.0))
+            cum += c
+        return float(self.edges_ms[-1])
+
+    def to_dict(self) -> dict:
+        return {
+            "bucket_upper_ms": list(self.edges_ms),
+            "counts": self.counts.tolist(),
+            "n": self.n,
+            "p50_ms": self.percentile(0.50),
+            "p99_ms": self.percentile(0.99),
+            "p999_ms": self.percentile(0.999),
+        }
+
+
+def _empty_admission_stats() -> dict:
+    return {
+        "accepted": 0,
+        "rejected_rate_limited": 0,
+        "rejected_queue_full": 0,
+        "completed": 0,
+        "failed": 0,
+        "cancelled_before_batch": 0,
+        "cancelled_mid_batch": 0,
+        "timed_out": 0,
+    }
+
+
+def _empty_aio_stats() -> dict:
+    # the async runtime's STABLE summary block (zero-initialized before
+    # the first event, pushed live by AsyncQueryService): queue depth
+    # per SLO class, admission accept/reject counters per class, the
+    # batching-window accounting, and the fixed-bucket latency
+    # histograms p50/p99/p999 derive from
+    return {
+        "queue_depth": {c: 0 for c in SLO_CLASSES},
+        "admission": {c: _empty_admission_stats() for c in SLO_CLASSES},
+        "batch_window": {
+            "flushes": 0,
+            "lanes_flushed": 0,
+            "fill_ratio": 0.0,
+            "deadline_flushes": 0,
+            "fill_flushes": 0,
+            "window_s_p50": 0.0,
+        },
+        "latency_hist": {c: LatencyHistogram().to_dict() for c in SLO_CLASSES},
+    }
 
 
 def _empty_exec_cache_stats() -> dict:
@@ -63,6 +166,15 @@ class ServiceMetrics:
             "plan_store": _empty_plan_store_stats(),
             "plan_pad_waste": _empty_pad_waste_stats(),
         }
+        # async-runtime block: zeroed full-schema placeholder until an
+        # AsyncQueryService pushes live numbers via set_aio_stats
+        self._aio_stats: dict = _empty_aio_stats()
+
+    def set_aio_stats(self, aio: dict) -> None:
+        """Install the async runtime's admission/window/histogram block
+        (pushed by ``AsyncQueryService`` after every flush cycle, same
+        stable schema as the zeroed placeholder)."""
+        self._aio_stats = dict(aio)
 
     def set_cache_stats(
         self,
@@ -115,6 +227,7 @@ class ServiceMetrics:
             "exec_cache": dict(self._cache_stats["exec_cache"]),
             "plan_store": dict(self._cache_stats["plan_store"]),
             "plan_pad_waste": dict(self._cache_stats["plan_pad_waste"]),
+            "aio": dict(self._aio_stats),
         }
         if extra:
             out.update(extra)

@@ -26,6 +26,7 @@ callers enqueue a window of requests and flush once.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 
 import numpy as np
@@ -40,7 +41,7 @@ from repro.graph.partition import Placement
 from repro.graph.structure import LabeledGraph
 from repro.serve import batcher, feedback
 from repro.serve import metrics as metrics_mod
-from repro.serve import plancache
+from repro.serve import persist, plancache
 
 
 class ServiceOverloaded(RuntimeError):
@@ -96,7 +97,14 @@ class Answers:
 
 
 class Ticket:
-    """Handle for an admitted request; resolved by :meth:`QueryService.flush`."""
+    """Handle for an admitted request; resolved by :meth:`QueryService.flush`.
+
+    After the request is *planned* (eagerly via
+    :meth:`QueryService.plan_request`, or inside ``flush``), ``sig``,
+    ``strategy``, and ``forecast_symbols`` carry the automaton
+    signature, the effective strategy, and the §4 cost-model traffic
+    forecast — the per-request signal the async layer's batching
+    windows and admission control size themselves from."""
 
     def __init__(self, query: str, starts: np.ndarray):
         self.query = query
@@ -104,6 +112,11 @@ class Ticket:
         self.done = False
         self.error: Exception | None = None
         self._answers: Answers | None = None
+        # filled at plan time (None/0 until the request is planned)
+        self.sig: tuple | None = None
+        self.strategy: str | None = None
+        self.forecast_symbols: float = 0.0
+        self._request = None  # set by QueryService.plan_request
 
     def result(self) -> Answers:
         if self.error is not None:
@@ -176,6 +189,11 @@ class QueryService:
         self.calibrator = feedback.Calibrator(decay=self.config.calibration_decay)
         self.metrics = metrics_mod.ServiceMetrics()
         self._queue: list[_Request] = []
+        # flush serialization: one drain owns the admission queue at a
+        # time (see flush()); enqueues stay lock-free — list.append and
+        # the swap inside the lock are each atomic under the GIL
+        self._flush_lock = threading.Lock()
+        self._flush_owner: int | None = None
         # stage the padded site arrays once per epoch; static per placement
         self._device_arrays = self.plan_store.site_device_arrays(
             placement, epoch=self.stats_epoch
@@ -202,16 +220,9 @@ class QueryService:
 
     # -- admission ----------------------------------------------------------
 
-    def enqueue(
-        self,
-        query: str,
-        start_nodes,
-        strategy: str | None = None,
-    ) -> Ticket:
-        if len(self._queue) >= self.config.max_pending:
-            raise ServiceOverloaded(
-                f"admission queue full ({self.config.max_pending} pending)"
-            )
+    def _validated_request(
+        self, query: str, start_nodes, strategy: str | None
+    ) -> _Request:
         if strategy not in (None, "S1", "S2"):
             raise ValueError(f"strategy must be None, 'S1', or 'S2', got {strategy!r}")
         ast = rx.parse(query)  # reject malformed queries at admission
@@ -222,17 +233,64 @@ class QueryService:
                 f"start nodes must be in [0, {n_nodes}); got range "
                 f"[{starts.min()}, {starts.max()}]"
             )
-        ticket = Ticket(query, starts)
-        self._queue.append(
-            _Request(
-                query=query,
-                ast=ast,
-                starts=starts,
-                ticket=ticket,
-                t_enqueue=time.perf_counter(),
-                strategy_override=strategy,
-            )
+        return _Request(
+            query=query,
+            ast=ast,
+            starts=starts,
+            ticket=Ticket(query, starts),
+            t_enqueue=time.perf_counter(),
+            strategy_override=strategy,
         )
+
+    def enqueue(
+        self,
+        query: str,
+        start_nodes,
+        strategy: str | None = None,
+    ) -> Ticket:
+        if len(self._queue) >= self.config.max_pending:
+            raise ServiceOverloaded(
+                f"admission queue full ({self.config.max_pending} pending)"
+            )
+        req = self._validated_request(query, start_nodes, strategy)
+        self._queue.append(req)
+        return req.ticket
+
+    def plan_request(
+        self,
+        query: str,
+        start_nodes,
+        strategy: str | None = None,
+    ) -> Ticket:
+        """Validate and *plan* a request without queueing it.
+
+        The returned ticket carries ``sig`` / ``strategy`` /
+        ``forecast_symbols`` immediately — the async serving layer plans
+        at admission so it can route the request to a per-signature
+        batching lane and size the lane's window from the cost forecast
+        *before* any execution happens.  Hand the ticket to
+        :meth:`enqueue_planned` when (and if) it should actually run;
+        planning a request and then dropping it costs only the plan-
+        cache lookup (a §5 rollout estimation on the first miss of its
+        query class)."""
+        req = self._validated_request(query, start_nodes, strategy)
+        self._plan(req)
+        req.ticket._request = req
+        return req.ticket
+
+    def enqueue_planned(self, ticket: Ticket) -> Ticket:
+        """Admit a ticket produced by :meth:`plan_request` into the
+        flush queue (same bound as :meth:`enqueue`)."""
+        req = getattr(ticket, "_request", None)
+        if req is None or req.plan is None:
+            raise ValueError("ticket was not produced by plan_request")
+        if ticket.done:
+            raise ValueError("ticket already resolved")
+        if len(self._queue) >= self.config.max_pending:
+            raise ServiceOverloaded(
+                f"admission queue full ({self.config.max_pending} pending)"
+            )
+        self._queue.append(req)
         return ticket
 
     def submit(self, query: str, start_nodes, strategy: str | None = None) -> Answers:
@@ -294,6 +352,15 @@ class QueryService:
         # request's own query, not the first-seen one
         req.plan = dataclasses.replace(plan, query=req.query)
         req.strategy = req.strategy_override or req.plan.choice.strategy
+        # surface the batching-window signals on the ticket; the S2
+        # forecast is per source node (one BFS per start rides the
+        # batch), S1 retrieves its label-matched set once per request
+        req.ticket.sig = req.sig
+        req.ticket.strategy = req.strategy
+        per_start = max(len(req.starts), 1) if req.strategy == "S2" else 1
+        req.ticket.forecast_symbols = (
+            planner.forecast_cost(req.plan, req.strategy) * per_start
+        )
 
     # -- execution ----------------------------------------------------------
 
@@ -414,12 +481,35 @@ class QueryService:
         """Plan, batch, execute, and resolve every pending request.
 
         One request failing (bad query class, executor error) fails only
-        its own ticket — the rest of the window still resolves."""
+        its own ticket — the rest of the window still resolves.
+
+        Flushes are serialized: exactly one drain owns the admission
+        queue at a time.  A flush from another thread blocks until the
+        active one finishes, then drains whatever arrived since — under
+        the sync API this was merely latent, but the async runtime
+        (:mod:`repro.serve.aio`) runs flushes on a worker thread while
+        the event-loop thread keeps admitting, and two interleaved
+        drains would resolve tickets out of two half-consistent queue
+        snapshots.  A *re-entrant* call from inside the executing flush
+        (same thread, e.g. a ticket callback submitting a follow-up
+        query) returns ``[]`` without draining — its requests stay
+        queued for the next flush instead of deadlocking."""
+        if self._flush_owner == threading.get_ident():
+            return []
+        with self._flush_lock:
+            self._flush_owner = threading.get_ident()
+            try:
+                return self._flush_locked()
+            finally:
+                self._flush_owner = None
+
+    def _flush_locked(self) -> list[Ticket]:
         pending, self._queue = self._queue, []
         planned: list[_Request] = []
         for req in pending:
             try:
-                self._plan(req)
+                if req.plan is None:  # plan_request() tickets arrive planned
+                    self._plan(req)
                 planned.append(req)
             except Exception as e:  # noqa: BLE001
                 self._fail(req, e)
@@ -436,6 +526,29 @@ class QueryService:
             plan_pad_waste=self.plan_store.pad_stats(),
         )
         return [r.ticket for r in pending]
+
+    # -- Stage-A persistence (warm restarts) ---------------------------------
+
+    def save_plan_store(self, path: str) -> dict:
+        """Snapshot the plan store's packed Stage-A artifacts for this
+        placement to ``path`` (see :mod:`repro.serve.persist`); returns
+        the manifest.  Call after the executors a deployment cares about
+        have been built at least once — the snapshot holds whatever is
+        currently staged."""
+        return persist.save_stage_a(
+            self.plan_store, self.placement, path, self.stats_epoch
+        )
+
+    def restore_plan_store(self, path: str) -> bool:
+        """Warm-restore a Stage-A snapshot saved by another process for
+        a content-identical placement.  Returns ``True`` when the
+        snapshot's fingerprint matched and its staged tensors were
+        installed (executor builds then skip tile packing entirely);
+        ``False`` falls back to the cold build path with the store
+        untouched."""
+        return persist.load_stage_a(
+            self.plan_store, self.placement, path, self.stats_epoch
+        )
 
     # -- reporting -----------------------------------------------------------
 

@@ -376,6 +376,64 @@ def test_one_failed_request_does_not_drop_the_window(setup):
         bad.result()
 
 
+def test_concurrent_flushes_serialize(setup):
+    """Regression (async runtime): flushes from several threads must
+    serialize on one drain at a time — interleaved drains used to
+    resolve tickets out of two half-consistent queue snapshots.  Every
+    ticket resolves exactly once and every record lands."""
+    import threading
+
+    g, placement, mesh = setup
+    svc = QueryService(placement, mesh, NET, config=ServeConfig(n_rollouts=50))
+    tickets, errs = [], []
+    start = threading.Barrier(4)
+
+    def worker(k):
+        mine = [svc.enqueue("a b", [k]) for _ in range(5)]
+        tickets.extend(mine)
+        start.wait()
+        try:
+            svc.flush()
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(k,)) for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert all(t.done for t in tickets)
+    assert len(svc.metrics.records) == 20  # each request exactly once
+    assert svc.n_pending == 0
+
+
+def test_reentrant_flush_defers_instead_of_deadlocking(setup):
+    """A flush issued from *inside* the executing flush (same thread —
+    e.g. a callback submitting a follow-up) returns [] and leaves its
+    requests queued for the next drain, rather than deadlocking on the
+    flush lock or double-draining."""
+    g, placement, mesh = setup
+    svc = QueryService(placement, mesh, NET, config=ServeConfig(n_rollouts=50))
+    inner: list = []
+    orig = svc._run_s1
+
+    def reentrant_run(reqs):
+        svc.enqueue("a b", [1])  # a follow-up admitted mid-flush ...
+        inner.append(svc.flush())  # ... must NOT drain from in here
+        orig(reqs)
+
+    svc._run_s1 = reentrant_run
+    first = svc.enqueue("a b", [0], strategy="S1")
+    svc.flush()
+    assert inner == [[]]
+    assert first.done
+    assert svc.n_pending == 1  # the follow-up waits for the next drain
+    svc._run_s1 = orig
+    svc.flush()
+    assert svc.n_pending == 0
+
+
 def test_unresolved_ticket_raises(setup):
     g, placement, mesh = setup
     svc = QueryService(placement, mesh, NET, config=ServeConfig(n_rollouts=50))

@@ -1,0 +1,456 @@
+"""`repro.serve.aio`: async answers vs the sync service (bit-exact),
+SLO admission/backpressure, cancellation semantics, adaptive windows,
+and Stage-A plan-store persistence (warm restarts pack zero tiles)."""
+
+import asyncio
+import os
+import pickle
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cost_model import NetworkParams
+from repro.dist import compat
+from repro.graph.generators import random_labeled_graph
+from repro.graph.partition import distribute
+from repro.kernels.frontier import ops as fops
+from repro.serve import metrics as metrics_mod
+from repro.serve import persist
+from repro.serve.aio import AdmissionRejected, AioConfig, AsyncQueryService, TokenBucket
+from repro.serve.metrics import SLO_CLASSES, LatencyHistogram
+from repro.serve.service import QueryService, ServeConfig
+
+NET = NetworkParams(n_peers=150, n_connections=450, replication_rate=0.2)
+
+# a mixed stream: planner-decided, forced-S1, and forced-S2 requests
+# across two automaton signatures
+STREAM = [
+    ("(l0|l1)+", [0, 5, 9], None),
+    ("l0 l2* l3", [1, 2], "S2"),
+    ("(l0|l1)+", [3], "S1"),
+    ("l1 l2", [4, 0], "S1"),
+    ("l0 l2* l3", [7], None),
+    ("(l0|l1)+", [8, 1], "S2"),
+]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = random_labeled_graph(60, 240, 4, seed=2)
+    placement = distribute(g, n_sites=4, replication_rate=0.3, seed=1)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    return g, placement, mesh
+
+
+def make_service(setup, backend="reference", **kw):
+    _, placement, mesh = setup
+    cfg = ServeConfig(
+        n_rollouts=50, seed=0, s2_backend=backend, s2_block_size=8, **kw
+    )
+    return QueryService(placement, mesh, NET, config=cfg)
+
+
+def run_async(coro):
+    return asyncio.run(coro)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: async answers are bit-exact vs the sync path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "backend", ["reference", "frontier_kernel", "frontier_kernel_sharded"]
+)
+def test_async_matches_sync_bit_exact(setup, backend):
+    """The async layer only decides *when* flushes run — answers for a
+    mixed S1/S2 stream must equal the sync service's exactly, on every
+    S2 backend."""
+    sync_svc = make_service(setup, backend)
+    tickets = [sync_svc.enqueue(q, s, strategy=st) for q, s, st in STREAM]
+    sync_svc.flush()
+    expected = [t.result().answers for t in tickets]
+
+    async_svc = make_service(setup, backend)
+
+    async def drive():
+        async with AsyncQueryService(async_svc) as aio:
+            slos = ["latency", "throughput"]
+            return await asyncio.gather(*[
+                aio.submit(q, s, slo=slos[i % 2], strategy=st)
+                for i, (q, s, st) in enumerate(STREAM)
+            ])
+
+    got = run_async(drive())
+    for (q, _, st), want, ans in zip(STREAM, expected, got):
+        assert ans.answers == want, (q, st, backend)
+    # every request resolved through the async path's metrics too
+    aio_block = async_svc.metrics.summary()["aio"]
+    done = sum(aio_block["admission"][c]["completed"] for c in SLO_CLASSES)
+    assert done == len(STREAM)
+
+
+def test_concurrent_submitters_batch_together(setup):
+    """Many concurrent submitters of one hot S2 class ride few flushes
+    (the window holds the lane open), and each still gets its own
+    answers back."""
+    svc = make_service(setup)
+
+    async def drive():
+        cfg = AioConfig(min_window_s=0.05, max_window_s={"latency": 0.1, "throughput": 0.2})
+        async with AsyncQueryService(svc, cfg) as aio:
+            outs = await asyncio.gather(*[
+                aio.submit("(l0|l1)+", [i], strategy="S2") for i in range(12)
+            ])
+            return outs, aio.aio_stats()
+
+    outs, stats = run_async(drive())
+    ref = make_service(setup)
+    for i, ans in enumerate(outs):
+        want = ref.submit("(l0|l1)+", [i], strategy="S2").answers
+        assert ans.answers == want
+    assert stats["batch_window"]["flushes"] < 12  # actually batched
+    assert stats["admission"]["latency"]["completed"] == 12
+
+
+# ---------------------------------------------------------------------------
+# admission: token buckets, bounded queues, explicit backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_token_bucket_refill_and_retry_after():
+    t = [0.0]
+    b = TokenBucket(rate_qps=2.0, burst=1.0, clock=lambda: t[0])
+    ok, _ = b.try_take()
+    assert ok
+    ok, retry = b.try_take()
+    assert not ok and retry == pytest.approx(0.5)
+    t[0] += 0.5  # one token refilled at 2 qps
+    ok, _ = b.try_take()
+    assert ok
+
+
+def test_rate_limited_tenant_rejected_others_unaffected(setup):
+    svc = make_service(setup)
+
+    async def drive():
+        cfg = AioConfig(tenant_rates={"greedy": (0.0, 1.0)})
+        async with AsyncQueryService(svc, cfg) as aio:
+            first = await aio.submit("l1 l2", [0], tenant="greedy")
+            with pytest.raises(AdmissionRejected) as ei:
+                await aio.submit("l1 l2", [1], tenant="greedy")
+            ok = await aio.submit("l1 l2", [2], tenant="polite")
+            return first, ei.value, ok, aio.aio_stats()
+
+    first, err, ok, stats = run_async(drive())
+    assert err.reason == "rate_limited" and err.retry_after_s > 0
+    assert first.answers and ok.answers
+    assert stats["admission"]["latency"]["rejected_rate_limited"] == 1
+    assert stats["admission"]["latency"]["accepted"] == 2
+
+
+def test_queue_full_backpressure_accepted_work_completes(setup):
+    """Over the per-class depth bound the service rejects explicitly
+    (with a retry-after hint) instead of queueing unboundedly — and the
+    work it accepted still completes."""
+    svc = make_service(setup)
+
+    async def drive():
+        cfg = AioConfig(
+            queue_depth={"latency": 2, "throughput": 256},
+            min_window_s=0.2,
+            max_window_s={"latency": 0.2, "throughput": 0.25},
+        )
+        async with AsyncQueryService(svc, cfg) as aio:
+            t1 = asyncio.ensure_future(aio.submit("l1 l2", [0]))
+            t2 = asyncio.ensure_future(aio.submit("l1 l2", [1]))
+            await asyncio.sleep(0)  # let both reach their lane
+            with pytest.raises(AdmissionRejected) as ei:
+                await aio.submit("l1 l2", [2])
+            # throughput class has its own bound: still admissible
+            t3 = asyncio.ensure_future(aio.submit("l1 l2", [3], slo="throughput"))
+            outs = await asyncio.gather(t1, t2, t3)
+            return ei.value, outs, aio.aio_stats()
+
+    err, outs, stats = run_async(drive())
+    assert err.reason == "queue_full"
+    assert err.retry_after_s > 0
+    assert all(o.answers for o in outs)
+    assert stats["admission"]["latency"]["rejected_queue_full"] == 1
+    assert stats["admission"]["latency"]["completed"] == 2
+    assert stats["admission"]["throughput"]["completed"] == 1
+    assert stats["queue_depth"] == {c: 0 for c in SLO_CLASSES}
+
+
+# ---------------------------------------------------------------------------
+# cancellation: queued work is dropped, in-flight work is discarded
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_before_batch_drops_the_work(setup):
+    svc = make_service(setup)
+
+    async def drive():
+        cfg = AioConfig(min_window_s=0.25, max_window_s={"latency": 0.25, "throughput": 0.25})
+        async with AsyncQueryService(svc, cfg) as aio:
+            task = asyncio.ensure_future(aio.submit("l1 l2", [0]))
+            await asyncio.sleep(0.01)  # admitted, lane window still open
+            task.cancel()
+            with pytest.raises(asyncio.CancelledError):
+                await task
+        return aio.aio_stats()
+
+    stats = run_async(drive())
+    assert stats["admission"]["latency"]["cancelled_before_batch"] == 1
+    assert stats["admission"]["latency"]["completed"] == 0
+    # the work never reached the service: nothing was recorded/executed
+    assert len(svc.metrics.records) == 0
+
+
+def test_timeout_drops_queued_work(setup):
+    svc = make_service(setup)
+
+    async def drive():
+        cfg = AioConfig(min_window_s=0.3, max_window_s={"latency": 0.3, "throughput": 0.3})
+        async with AsyncQueryService(svc, cfg) as aio:
+            with pytest.raises(asyncio.TimeoutError):
+                await aio.submit("l1 l2", [0], timeout_s=0.02)
+        return aio.aio_stats()
+
+    stats = run_async(drive())
+    assert stats["admission"]["latency"]["timed_out"] == 1
+    assert stats["admission"]["latency"]["cancelled_before_batch"] == 1
+    assert len(svc.metrics.records) == 0
+
+
+def test_cancel_mid_batch_discards_the_answer(setup):
+    """A request cancelled while its batch executes: the batch completes
+    (its lane-mates get answers), the cancelled future's answer is
+    discarded, and the mid-batch counter ticks."""
+    svc = make_service(setup)
+    orig_flush = svc.flush
+
+    def slow_flush():
+        time.sleep(0.25)
+        return orig_flush()
+
+    svc.flush = slow_flush
+
+    async def drive():
+        async with AsyncQueryService(svc, AioConfig(min_window_s=0.001)) as aio:
+            victim = asyncio.ensure_future(aio.submit("l1 l2", [0]))
+            keeper = asyncio.ensure_future(aio.submit("l1 l2", [1]))
+            await asyncio.sleep(0.1)  # window closed; flush running
+            victim.cancel()
+            with pytest.raises(asyncio.CancelledError):
+                await victim
+            out = await keeper
+            return out, aio.aio_stats()
+
+    out, stats = run_async(drive())
+    assert out.answers
+    assert stats["admission"]["latency"]["cancelled_mid_batch"] == 1
+    assert stats["admission"]["latency"]["completed"] == 1
+    # the batch DID execute both requests — only the answer was dropped
+    assert len(svc.metrics.records) == 2
+
+
+# ---------------------------------------------------------------------------
+# adaptive windows
+# ---------------------------------------------------------------------------
+
+
+def test_windows_adapt_per_lane_from_observed_cost(setup):
+    """After a few flushes the lane's window tracks its own measured
+    execution time (gain × EWMA), not the global bootstrap."""
+    svc = make_service(setup)
+
+    async def drive():
+        cfg = AioConfig(min_window_s=0.0001, max_window_s={"latency": 10.0, "throughput": 10.0})
+        async with AsyncQueryService(svc, cfg) as aio:
+            for i in range(4):
+                await aio.submit("(l0|l1)+", [i], strategy="S2")
+            lane_key = ("latency", "S2", aio.service.plan_request("(l0|l1)+", [0], "S2").sig)
+            est = aio._lane_exec_s[lane_key]
+            # the next lane for this signature opens with gain × est
+            pend_window = aio._window_s(
+                type("P", (), {"lane_key": lane_key, "slo": "latency",
+                               "ticket": aio.service.plan_request("(l0|l1)+", [0], "S2")})()
+            )
+            return est, pend_window, cfg.window_gain
+
+    est, window, gain = run_async(drive())
+    assert est > 0
+    assert window == pytest.approx(gain * est, rel=1e-6)
+
+
+def test_deadline_vs_fill_flush_triggers(setup):
+    """A trickle flushes on the deadline; a burst that fills the padded
+    batch flushes on fill without waiting out the window."""
+    svc = make_service(setup, max_batch=8)
+
+    async def drive():
+        cfg = AioConfig(
+            min_window_s=10.0, max_window_s={"latency": 10.0, "throughput": 10.0}
+        )  # windows never expire in-test: only fill can flush
+        async with AsyncQueryService(svc, cfg) as aio:
+            outs = await asyncio.gather(*[
+                aio.submit("(l0|l1)+", [i], strategy="S2") for i in range(8)
+            ])
+            stats = aio.aio_stats()
+            return outs, stats
+
+    outs, stats = run_async(drive())
+    assert all(o.answers for o in outs)
+    assert stats["batch_window"]["fill_flushes"] >= 1
+    assert stats["batch_window"]["deadline_flushes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# metrics schema
+# ---------------------------------------------------------------------------
+
+
+def test_sync_service_carries_zeroed_aio_block(setup):
+    s = make_service(setup).summary()
+    assert s["aio"] == metrics_mod._empty_aio_stats()
+
+
+def test_aio_stats_matches_placeholder_schema(setup):
+    svc = make_service(setup)
+
+    async def drive():
+        async with AsyncQueryService(svc) as aio:
+            await aio.submit("l1 l2", [0])
+            return aio.aio_stats()
+
+    live = run_async(drive())
+    placeholder = metrics_mod._empty_aio_stats()
+
+    def keys(d):
+        return {
+            k: keys(v) if isinstance(v, dict) else type(v).__name__
+            for k, v in sorted(d.items())
+        }
+
+    assert set(keys(live)) == set(keys(placeholder))
+    assert keys(live["admission"]) == keys(placeholder["admission"])
+    assert set(live["latency_hist"]) == set(placeholder["latency_hist"])
+    assert live["latency_hist"]["latency"]["n"] == 1
+
+
+def test_latency_histogram_percentiles():
+    h = LatencyHistogram(edges_ms=(1.0, 10.0, 100.0))
+    for _ in range(90):
+        h.observe(0.0005)  # 0.5ms -> first bucket
+    for _ in range(10):
+        h.observe(0.05)  # 50ms -> third bucket
+    assert h.n == 100
+    assert h.percentile(0.5) <= 1.0
+    assert 10.0 < h.percentile(0.99) <= 100.0
+    h.observe(10.0)  # 10s -> overflow bucket reports the last edge
+    assert h.percentile(0.9999) == 100.0
+    d = h.to_dict()
+    assert d["n"] == 101 and len(d["counts"]) == 4
+
+
+# ---------------------------------------------------------------------------
+# Stage-A persistence: warm restarts
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def fused_setup():
+    g = random_labeled_graph(48, 200, 4, seed=5)
+    placement = distribute(g, n_sites=4, replication_rate=0.3, seed=1)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    return g, placement, mesh
+
+
+def fused_service(placement, mesh):
+    return QueryService(
+        placement, mesh, NET,
+        config=ServeConfig(
+            n_rollouts=30, seed=0,
+            s2_backend="frontier_kernel_sharded", s2_block_size=8,
+        ),
+    )
+
+
+def test_warm_restore_bit_identical_and_packs_zero_tiles(fused_setup, tmp_path):
+    """Acceptance criterion: a restarted service that warm-restores the
+    Stage-A snapshot serves bit-identical answers and its executor
+    builds never call pack_blocks (BUILD_COUNTERS)."""
+    g, placement, mesh = fused_setup
+    path = str(tmp_path / "stage_a.pkl")
+    queries = [("(l0|l1)+", [0, 3]), ("l0 l2* l3", [1])]
+
+    svc_a = fused_service(placement, mesh)
+    want = [svc_a.submit(q, s, strategy="S2").answers for q, s in queries]
+    manifest = svc_a.save_plan_store(path)
+    assert manifest["n_entries"] > 0
+    assert manifest["fingerprint"] == persist.placement_fingerprint(placement)
+
+    svc_b = fused_service(placement, mesh)  # "restarted process"
+    assert svc_b.restore_plan_store(path)
+    fops.reset_build_counters()
+    got = [svc_b.submit(q, s, strategy="S2").answers for q, s in queries]
+    assert got == want
+    assert fops.BUILD_COUNTERS["pack_blocks"] == 0
+    assert fops.BUILD_COUNTERS["make_blocked_graph"] == 0
+    assert fops.BUILD_COUNTERS["stage_sharded_graph"] == 0
+    # Stage B (cheap schedules) still ran per signature
+    assert fops.BUILD_COUNTERS["sharded_level_schedule"] == len(queries)
+
+
+def test_restore_rejects_wrong_placement(fused_setup, tmp_path):
+    """A snapshot from a different partition of the same graph (or a
+    different graph) must not restore — fingerprint mismatch falls back
+    to the cold path with the store untouched."""
+    g, placement, mesh = fused_setup
+    path = str(tmp_path / "stage_a.pkl")
+    svc_a = fused_service(placement, mesh)
+    svc_a.submit("(l0|l1)+", [0], strategy="S2")
+    svc_a.save_plan_store(path)
+
+    other = distribute(g, n_sites=4, replication_rate=0.3, seed=99)
+    svc_c = fused_service(other, mesh)
+    size0 = svc_c.plan_store.stats()["size"]  # the init-staged site arrays
+    assert not svc_c.restore_plan_store(path)
+    assert svc_c.plan_store.stats()["size"] == size0
+
+
+def test_restore_rejects_garbage_and_version_skew(fused_setup, tmp_path):
+    g, placement, mesh = fused_setup
+    svc = fused_service(placement, mesh)
+    missing = str(tmp_path / "nope.pkl")
+    assert not svc.restore_plan_store(missing)
+
+    garbage = tmp_path / "garbage.pkl"
+    garbage.write_bytes(b"not a pickle")
+    assert not svc.restore_plan_store(str(garbage))
+
+    skew = tmp_path / "skew.pkl"
+    with open(skew, "wb") as f:
+        pickle.dump(
+            {"format_version": persist.FORMAT_VERSION + 1,
+             "fingerprint": persist.placement_fingerprint(placement),
+             "stats_epoch": 0, "entries": []},
+            f,
+        )
+    assert not svc.restore_plan_store(str(skew))
+
+
+def test_save_is_atomic(fused_setup, tmp_path):
+    """No .tmp litter after a save; the snapshot file parses whole."""
+    g, placement, mesh = fused_setup
+    svc = fused_service(placement, mesh)
+    svc.submit("(l0|l1)+", [0], strategy="S2")
+    path = tmp_path / "stage_a.pkl"
+    svc.save_plan_store(str(path))
+    assert path.exists()
+    assert [p.name for p in tmp_path.iterdir()] == ["stage_a.pkl"]
+    with open(path, "rb") as f:
+        blob = pickle.load(f)
+    assert blob["format_version"] == persist.FORMAT_VERSION

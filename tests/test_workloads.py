@@ -1,0 +1,74 @@
+"""`repro.graph.workloads`: seed-path instantiation — determinism,
+answerability by construction, and the hot/cold skew the serving
+benchmarks rely on."""
+
+import numpy as np
+import pytest
+
+from repro.core import paa
+from repro.core import regex as rx
+from repro.graph.generators import random_labeled_graph
+from repro.graph.structure import to_device_graph
+from repro.graph.workloads import WorkloadConfig, WorkloadQuery, generate
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return random_labeled_graph(120, 500, 5, seed=3)
+
+
+def test_deterministic_under_seed(graph):
+    a = generate(graph, WorkloadConfig(n_queries=50, seed=11))
+    b = generate(graph, WorkloadConfig(n_queries=50, seed=11))
+    assert [q.query for q in a] == [q.query for q in b]
+    assert all((x.starts == y.starts).all() for x, y in zip(a, b))
+    assert [q.hot for q in a] == [q.hot for q in b]
+    c = generate(graph, WorkloadConfig(n_queries=50, seed=12))
+    assert [q.query for q in a] != [q.query for q in c]
+
+
+def test_queries_parse_and_are_answerable(graph):
+    """Every query parses, and the first start node (the seed-path
+    witness) reaches at least one answer — generalization only widens
+    the language, so the witnessed path always matches."""
+    dg = to_device_graph(graph)
+    for wq in generate(graph, WorkloadConfig(n_queries=30, seed=4)):
+        rx.parse(wq.query)
+        ca = paa.compile_query(wq.query, graph)
+        ans = np.asarray(paa.answers_single_source(ca, dg, int(wq.starts[0])))
+        assert ans.any(), wq.query
+        assert 1 <= len(wq.starts) <= WorkloadConfig().max_starts
+        assert wq.starts.dtype == np.int32
+        assert (wq.starts >= 0).all() and (wq.starts < graph.n_nodes).all()
+
+
+def test_hot_cold_skew(graph):
+    cfg = WorkloadConfig(n_queries=300, hot_fraction=0.8, hot_pool=4, seed=9)
+    stream = generate(graph, cfg)
+    hot = [q for q in stream if q.hot]
+    # the hot share concentrates on few classes; cold queries are fresh
+    assert 0.7 <= len(hot) / len(stream) <= 0.9
+    assert len({q.query for q in hot}) <= cfg.hot_pool
+    # rank weighting: the top hot class dominates the pool
+    counts = {}
+    for q in hot:
+        counts[q.query] = counts.get(q.query, 0) + 1
+    assert max(counts.values()) > len(hot) / (2 * cfg.hot_pool)
+
+
+def test_generalization_knobs(graph):
+    all_wild = generate(
+        graph,
+        WorkloadConfig(n_queries=20, wildcard_prob=1.0, union_prob=0.0, seed=1),
+    )
+    assert all(set(q.query.split()) <= {".", "(.)*", "(.)+"} for q in all_wild)
+    no_closure = generate(
+        graph, WorkloadConfig(n_queries=20, closure_prob=0.0, seed=1)
+    )
+    assert all("*" not in q.query and "+" not in q.query for q in no_closure)
+    lengths = {
+        len(q.query.split())
+        for q in generate(graph, WorkloadConfig(n_queries=50, min_len=3, max_len=3, seed=2))
+    }
+    assert max(lengths) == 3  # dead-ended walks may cut a few short
+    assert min(lengths) >= 1
