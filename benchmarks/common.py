@@ -1,13 +1,40 @@
 """Shared benchmark fixtures: the Alibaba statistical twin + indexes,
-built once and cached across benchmark modules."""
+built once and cached across benchmark modules, plus the execution-
+environment header every ``BENCH_*.json`` carries (so interpret-mode CPU
+numbers are never silently presented as kernel numbers)."""
 
 from __future__ import annotations
 
 import functools
 import time
 
+import jax
+
 from repro.core import paa
 from repro.graph.generators import alibaba_like
+
+# free-form provenance note threaded through `benchmarks.run --platform`
+# (e.g. "ci-cpu-skylake", "v5p-8 pod slice"); lands in every BENCH json
+PLATFORM_NOTE: str | None = None
+
+
+def set_platform_note(note: str | None) -> None:
+    global PLATFORM_NOTE
+    PLATFORM_NOTE = note
+
+
+def bench_env() -> dict:
+    """The stable env header of every ``BENCH_*.json``: which XLA
+    backend actually executed, whether the Pallas kernels ran in
+    interpret mode (off-TPU they always do — those latencies are
+    interpreter numbers, not kernel numbers), and the operator-supplied
+    platform note."""
+    backend = jax.default_backend()
+    return {
+        "jax_backend": backend,
+        "interpret": backend != "tpu",
+        "platform_note": PLATFORM_NOTE,
+    }
 
 
 @functools.lru_cache(maxsize=1)

@@ -35,6 +35,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from benchmarks.common import bench_env
 from repro.core import paa
 from repro.graph.generators import random_labeled_graph
 from repro.kernels.frontier.frontier import count_pallas_calls
@@ -122,6 +123,7 @@ def run(
 
     result = {
         "benchmark": "frontier_level",
+        "env": bench_env(),
         "query": QUERY,
         "n_nodes": n_nodes,
         "n_edges": n_edges,

@@ -41,6 +41,7 @@ import time
 
 import numpy as np
 
+from benchmarks.common import bench_env
 from repro.core import paa, strategies
 from repro.dist import compat
 from repro.graph.generators import random_labeled_graph
@@ -91,6 +92,7 @@ def run(
     global_plan = build_level_plan(ca, make_blocked_graph(g, block))
     result: dict = {
         "benchmark": "frontier_sharded",
+        "env": bench_env(),
         "query": QUERY,
         "n_nodes": n_nodes,
         "n_edges": n_edges,

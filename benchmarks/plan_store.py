@@ -29,6 +29,7 @@ import time
 
 import numpy as np
 
+from benchmarks.common import bench_env
 from repro.core import paa, plans, strategies
 from repro.dist import compat
 from repro.graph.generators import random_labeled_graph
@@ -93,6 +94,7 @@ def run(
 
     result: dict = {
         "benchmark": "plan_store",
+        "env": bench_env(),
         "n_nodes": n_nodes,
         "n_edges": n_edges,
         "n_labels": n_labels,

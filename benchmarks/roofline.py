@@ -1,10 +1,33 @@
 """Roofline aggregation: reads dryrun_results.json and prints the
-per-(arch × shape × mesh) three-term roofline table (§Roofline)."""
+per-(arch × shape × mesh) three-term roofline table (§Roofline) — plus
+the frontier **memory roofline** (``run_packed``): f32 query stacking vs
+bitpacked uint32 lane words at Q ∈ {8, 64, 256}, and the chunked
+Stage-A staging sweep on a ≥100k-edge graph.
+
+``run_packed`` measures three things and writes
+``BENCH_frontier_packed.json`` (the ``packed`` subset of
+``benchmarks.run``, regression-gated on its ``fixpoint_ms*`` leaves):
+
+* **frontier bytes** — the fixpoint frontier operand one Q-query batch
+  needs: f32 stacking pays 4 bytes per (state, lane, node) across
+  ``ceil(Q/8)`` sequential 8-lane chunks; the packed path pays one bit
+  per lane inside the same 8 uint32 word rows — a 32× footprint drop at
+  Q=256.
+* **multi-query fixpoint latency** — ``multi_query_reach`` (f32) vs
+  ``multi_query_reach_packed`` on the same plan: at Q=64 the f32 path
+  runs 8 device-resident fixpoints back-to-back, the packed path one.
+* **staging peak memory** — one-shot ``stage_graph`` vs chunked
+  (``chunk_edges``) on a ≥100k-edge generator graph: tracemalloc peak
+  *transient* host bytes (peak minus the retained staged tiles), plus a
+  byte-identity check of the staged artifacts.
+"""
 
 from __future__ import annotations
 
 import json
 import os
+import time
+import tracemalloc
 
 
 def run(path: str = "dryrun_results.json") -> list[str]:
@@ -31,6 +54,192 @@ def run(path: str = "dryrun_results.json") -> list[str]:
             f"{roof['collective_s'] * 1e3:.2f},{roof['bottleneck']},"
             f"{'' if ufr is None else f'{ufr:.2f}'}"
         )
+    return rows
+
+
+PACKED_QUERY = "(l0|l1)* l2 .^-1"  # union-star + wildcard-inverse
+PACKED_JSON = "BENCH_frontier_packed.json"
+
+
+def _best(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_packed(
+    n_nodes: int = 128,
+    n_edges: int = 900,
+    n_labels: int = 5,
+    block: int = 64,
+    repeats: int = 3,
+    big_nodes: int = 512,
+    big_edges: int = 400_000,
+    chunk_edges: int = 50_000,
+    out: str = PACKED_JSON,
+    seed: int = 0,
+    interpret: bool = True,
+) -> list[str]:
+    import numpy as np
+
+    from benchmarks.common import bench_env
+    from repro.core import paa
+    from repro.graph.generators import random_labeled_graph
+    from repro.kernels.frontier import ops as fops
+
+    g = random_labeled_graph(n_nodes, n_edges, n_labels, seed=seed)
+    bg = fops.make_blocked_graph(g, block_size=block)
+    ca = paa.compile_query(PACKED_QUERY, g)
+    plan = fops.build_level_plan(ca, bg)
+    v_pad = plan.v_pad
+
+    rng = np.random.default_rng(seed)
+    result = {
+        "benchmark": "frontier_packed",
+        "env": bench_env(),
+        "query": PACKED_QUERY,
+        "n_nodes": n_nodes,
+        "n_edges": n_edges,
+        "n_labels": n_labels,
+        "block_size": block,
+        "n_states": ca.n_states,
+        "interpret": interpret,
+    }
+    rows = ["packed,metric,value"]
+
+    # ---- frontier bytes + fixpoint latency at Q in {8, 64, 256} ----------
+    for q in (8, 64, 256):
+        masks = np.zeros((q, n_nodes), np.float32)
+        masks[np.arange(q), rng.choice(n_nodes, size=q)] = 1.0
+
+        # f32 stacking: ceil(Q/8) sequential chunks, each a full
+        # (n_states·8, v_pad) f32 frontier; packed: ceil(Q/256) chunks of
+        # the same shape in uint32 lane words (1 bit per lane)
+        chunks_f32 = -(-q // fops.QPAD)
+        chunks_pk = -(-q // fops.QPACK)
+        bytes_f32 = chunks_f32 * ca.n_states * fops.QPAD * v_pad * 4
+        bytes_pk = chunks_pk * ca.n_states * fops.QPAD * v_pad * 4
+        result[f"frontier_bytes_f32_q{q}"] = bytes_f32
+        result[f"frontier_bytes_packed_q{q}"] = bytes_pk
+        result[f"frontier_bytes_ratio_q{q}"] = bytes_f32 / bytes_pk
+
+        def fx_f32():
+            fops.multi_query_reach(ca, bg, masks, interpret=interpret, plan=plan)
+
+        def fx_pk():
+            fops.multi_query_reach_packed(ca, bg, masks, interpret=interpret, plan=plan)
+
+        fx_f32(), fx_pk()  # warm the shared fixpoint traces
+        a_f32 = fops.multi_query_reach(ca, bg, masks, interpret=interpret, plan=plan)
+        a_pk = fops.multi_query_reach_packed(
+            ca, bg, masks, interpret=interpret, plan=plan
+        )
+        if not (a_f32 == a_pk).all():
+            raise AssertionError(f"packed != f32 answers at Q={q}")
+        t_f32 = _best(fx_f32, repeats)
+        t_pk = _best(fx_pk, repeats)
+        result[f"fixpoint_ms_f32_q{q}"] = 1e3 * t_f32
+        result[f"fixpoint_ms_packed_q{q}"] = 1e3 * t_pk
+        result[f"throughput_ratio_q{q}"] = t_f32 / t_pk
+        for k in (
+            f"frontier_bytes_ratio_q{q}",
+            f"fixpoint_ms_f32_q{q}",
+            f"fixpoint_ms_packed_q{q}",
+            f"throughput_ratio_q{q}",
+        ):
+            rows.append(f"packed,{k},{result[k]:.4f}")
+
+    # ---- chunked Stage-A staging sweep on a >=100k-edge graph ------------
+    big = random_labeled_graph(big_nodes, big_edges, 2, seed=seed + 1)
+
+    def stage_oneshot():
+        fops.reset_build_counters()
+        return fops.stage_graph(big, 128)
+
+    def stage_chunked():
+        fops.reset_build_counters()
+        return fops.stage_graph(big, 128, chunk_edges=chunk_edges)
+
+    stage_oneshot()  # touch allocator pools once before measuring
+    tracemalloc.start()
+    tracemalloc.reset_peak()
+    s_one = stage_oneshot()
+    _, peak_one = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    tracemalloc.start()
+    tracemalloc.reset_peak()
+    s_chk = stage_chunked()
+    _, peak_chk = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    chunks_used = int(fops.BUILD_COUNTERS["staging_chunks"])
+
+    staged_bytes = int(np.asarray(s_one.tiles).nbytes)
+    if not (np.asarray(s_one.tiles) == np.asarray(s_chk.tiles)).all():
+        raise AssertionError("chunked staging is not byte-identical")
+    result.update(
+        {
+            "staging_n_nodes": big_nodes,
+            "staging_n_edges": big_edges,
+            "staging_chunk_edges": chunk_edges,
+            "staging_chunks": chunks_used,
+            "staged_tile_bytes": staged_bytes,
+            # peak traced bytes beyond the retained staged tiles: the
+            # per-edge scratch the packing needed
+            "staging_transient_bytes_oneshot": int(peak_one) - staged_bytes,
+            "staging_transient_bytes_chunked": int(peak_chk) - staged_bytes,
+        }
+    )
+    result["staging_transient_ratio"] = max(
+        result["staging_transient_bytes_oneshot"], 1
+    ) / max(result["staging_transient_bytes_chunked"], 1)
+
+    # isolated per-label pack: the per-edge scratch chunking bounds,
+    # without the (identical-on-both-paths) store concat copy
+    from repro.kernels.frontier.ref import pack_blocks, pack_blocks_chunked
+
+    src, dst = big.edges_with_label(0)
+
+    def pack_one():
+        return pack_blocks(src, dst, big.n_nodes, 128)
+
+    def pack_chk():
+        return pack_blocks_chunked(src, dst, big.n_nodes, 128, chunk_edges)
+
+    pack_one()
+    tracemalloc.start()
+    tracemalloc.reset_peak()
+    t_one = pack_one()[0]
+    _, ppeak_one = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    tracemalloc.start()
+    tracemalloc.reset_peak()
+    t_chk = pack_chk()[0]
+    _, ppeak_chk = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    tile_bytes = int(t_one.nbytes)
+    result["pack_label_edges"] = int(len(src))
+    result["pack_scratch_bytes_oneshot"] = int(ppeak_one) - tile_bytes
+    result["pack_scratch_bytes_chunked"] = int(ppeak_chk) - tile_bytes
+    result["pack_scratch_ratio"] = max(
+        result["pack_scratch_bytes_oneshot"], 1
+    ) / max(result["pack_scratch_bytes_chunked"], 1)
+    del t_one, t_chk
+
+    for k in (
+        "staging_n_edges", "staging_chunks", "staged_tile_bytes",
+        "staging_transient_bytes_oneshot", "staging_transient_bytes_chunked",
+        "staging_transient_ratio", "pack_label_edges",
+        "pack_scratch_bytes_oneshot", "pack_scratch_bytes_chunked",
+        "pack_scratch_ratio",
+    ):
+        rows.append(f"packed,{k},{result[k]:.4f}")
+
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    rows.append(f"packed,json,{out}")
     return rows
 
 

@@ -21,10 +21,11 @@ import json
 import sys
 import time
 import traceback
+import types
 
 KNOWN = [
     "table1", "table2", "fig2", "fig3", "fig4", "scenario6", "roofline",
-    "serve", "serve_async", "frontier", "dist", "plans",
+    "serve", "serve_async", "frontier", "dist", "plans", "packed",
 ]
 
 # --regress gate: a fresh run may not be slower than the checked-in
@@ -35,9 +36,12 @@ KNOWN = [
 #   serve_async  — every p99_ms leaf of BENCH_serve_async.json OUTSIDE
 #                  the `overload` block (2x offered load sheds by
 #                  design; its tail is rejection-shaped, not a signal)
+#   packed       — every fixpoint_ms* leaf of BENCH_frontier_packed.json
+#                  (f32 and packed multi-query fixpoints at Q=8/64/256)
 REGRESS_FACTOR = 1.3
 DIST_JSON = "BENCH_frontier_sharded.json"
 SERVE_ASYNC_JSON = "BENCH_serve_async.json"
+PACKED_JSON = "BENCH_frontier_packed.json"
 
 
 def _collect_ms(
@@ -95,8 +99,17 @@ def main() -> None:
         help=(
             "after the run, compare the gated subsets against their "
             f"checked-in baselines ({DIST_JSON} fixpoint-ms for `dist`, "
-            f"{SERVE_ASYNC_JSON} p99-ms for `serve_async`) and exit "
+            f"{SERVE_ASYNC_JSON} p99-ms for `serve_async`, "
+            f"{PACKED_JSON} fixpoint-ms for `packed`) and exit "
             f"non-zero on a > {REGRESS_FACTOR}x slowdown"
+        ),
+    )
+    ap.add_argument(
+        "--platform",
+        help=(
+            "free-form provenance note recorded in every BENCH_*.json env "
+            "header (e.g. 'ci-cpu', 'v5p-8'); the header also records "
+            "jax.default_backend() and the interpret-mode flag"
         ),
     )
     args = ap.parse_args()
@@ -109,14 +122,15 @@ def main() -> None:
     gates = [
         ("dist", DIST_JSON, "fixpoint_ms", None),
         ("serve_async", SERVE_ASYNC_JSON, "p99_ms", "overload"),
+        ("packed", PACKED_JSON, "fixpoint_ms", None),
     ]
     baselines: dict[str, dict] = {}
     if args.regress:
         gated = [g for g in gates if g[0] in selected]
         if not gated:
             ap.error(
-                "--regress gates the `dist` and `serve_async` subsets; "
-                "include at least one in names"
+                "--regress gates the `dist`, `serve_async`, and `packed` "
+                "subsets; include at least one in names"
             )
         for name, path, _, _ in gated:
             try:
@@ -126,6 +140,7 @@ def main() -> None:
                 ap.error(f"--regress needs a checked-in {path} baseline")
 
     from benchmarks import (
+        common,
         fig2_costs,
         fig3_regions,
         fig4_estimation,
@@ -140,6 +155,8 @@ def main() -> None:
         table2_queries,
     )
 
+    common.set_platform_note(args.platform)
+
     modules = [
         ("table1", table1_complexity),
         ("table2", table2_queries),
@@ -153,6 +170,7 @@ def main() -> None:
         ("frontier", frontier_level),
         ("dist", frontier_sharded),
         ("plans", plan_store),
+        ("packed", types.SimpleNamespace(run=roofline.run_packed)),
     ]
 
     for name, mod in modules:

@@ -36,6 +36,7 @@ import time
 
 import numpy as np
 
+from benchmarks.common import bench_env
 from repro.dist import compat
 from repro.graph import generators
 from repro.graph.partition import distribute, random_overlay
@@ -248,6 +249,7 @@ def run(
     cfg = _aio_config()
     result = {
         "benchmark": "serve_async",
+        "env": bench_env(),
         "small": small,
         "n_queries": n_queries,
         "aio_config": {

@@ -22,6 +22,7 @@ import time
 
 import numpy as np
 
+from benchmarks.common import bench_env
 from repro.core import paa, planner, strategies
 from repro.core import regex as rx
 from repro.dist import compat
@@ -111,6 +112,7 @@ def run(
     summary = service.summary()
     result = {
         "benchmark": "serve_throughput",
+        "env": bench_env(),
         "small": small,
         "n_queries": n_warm,
         "starts_per_query": starts_per_query,

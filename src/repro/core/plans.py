@@ -100,6 +100,10 @@ class GraphPlanStore:
         self._pad_useful = 0
         self._pad_padded = 0
         self._bucket_steps: dict[str, int] = {}
+        # total edge-list slices consumed by chunked Stage-A packing
+        # through this store (0 when every staging was one-shot); feeds
+        # the serve `frontier_mem` metrics block
+        self._staging_chunks = 0
 
     # -- core get-or-build --------------------------------------------------
 
@@ -121,11 +125,26 @@ class GraphPlanStore:
     # -- Stage-A artifacts --------------------------------------------------
 
     def staged_graph(
-        self, graph: LabeledGraph, block_size: int = 128, epoch: int = 0
+        self,
+        graph: LabeledGraph,
+        block_size: int = 128,
+        epoch: int = 0,
+        chunk_edges: int | None = None,
     ) -> fops.StagedGraph:
-        """The global fused backend's staged tile tensor + offsets."""
+        """The global fused backend's staged tile tensor + offsets —
+        shared by BOTH frontier dtypes (the packed backend thresholds
+        the same f32 tiles in-kernel), so the cache key carries no dtype.
+        ``chunk_edges`` streams the packing in bounded edge slices; the
+        artifact is byte-identical to the one-shot path, so the key is
+        unchanged and a chunked build can warm an unchunked caller."""
+
+        def build() -> fops.StagedGraph:
+            staged = fops.stage_graph(graph, block_size, chunk_edges)
+            self._staging_chunks += staged.staging_chunks
+            return staged
+
         key = ("staged_graph", id(graph), epoch, block_size)
-        return self._get(key, graph, epoch, lambda: fops.stage_graph(graph, block_size))
+        return self._get(key, graph, epoch, build)
 
     def local_graphs(self, placement: Placement, epoch: int = 0) -> list[LabeledGraph]:
         """Per-site site-local graph views of the placement."""
@@ -299,6 +318,13 @@ class GraphPlanStore:
             self._bucket_steps[key] = (
                 self._bucket_steps.get(key, 0) + b.n_steps * len(b.sites)
             )
+
+    @property
+    def staging_chunks(self) -> int:
+        """Total chunked Stage-A edge slices consumed through this store
+        (kept out of :meth:`stats` — that dict's key set is a stable
+        metrics schema)."""
+        return self._staging_chunks
 
     def pad_stats(self) -> dict:
         return {

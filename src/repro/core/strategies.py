@@ -423,7 +423,7 @@ def make_s2_step_fn(
 ):
     """Build the jitted batched S2 executor.
 
-    Three backends share one call contract:
+    Four backends share one call contract:
 
     * ``"reference"`` (default) — sites (edge shards) live on
       ``site_axes``; the query batch is sharded over ``batch_axis``.
@@ -442,6 +442,13 @@ def make_s2_step_fn(
       summed-per-site convention so :func:`s2_execute` can divide it
       back out.  Retrieval is modeled on the deduplicated *global*
       graph — the fastest path when one device can hold all tiles.
+
+    * ``"frontier_kernel_packed"`` — the fused kernel with the frontier
+      bitpacked into uint32 lane words: the same staged tiles and
+      Stage-B schedule as ``"frontier_kernel"``, but each fixpoint
+      chunk carries ``QPACK`` = 256 query lanes (8 word rows × 32 bits)
+      instead of 8, at 1/32 the frontier HBM — bit-exact on the boolean
+      semiring, with the §4.2 meters preserved per lane.
 
     * ``"frontier_kernel_sharded"`` — the fused kernel on *site-local*
       edge partitions (``placement`` required): each site's tile lists
@@ -483,6 +490,11 @@ def make_s2_step_fn(
             ca, n_nodes, max_levels, graph, replication_factor, block_size,
             interpret, plan_store, stats_epoch,
         )
+    if backend == "frontier_kernel_packed":
+        return _make_frontier_packed_step_fn(
+            ca, n_nodes, max_levels, graph, replication_factor, block_size,
+            interpret, plan_store, stats_epoch,
+        )
     if backend == "frontier_kernel_sharded":
         return _make_frontier_sharded_step_fn(
             ca, n_nodes, mesh, site_axes, batch_axis, max_levels, placement,
@@ -490,8 +502,9 @@ def make_s2_step_fn(
         )
     if backend != "reference":
         raise ValueError(
-            "backend must be 'reference', 'frontier_kernel', or "
-            f"'frontier_kernel_sharded', got {backend!r}"
+            "backend must be 'reference', 'frontier_kernel', "
+            "'frontier_kernel_packed', or 'frontier_kernel_sharded', "
+            f"got {backend!r}"
         )
     n_states = ca.n_states
     levels = max_levels if max_levels is not None else n_states * n_nodes
@@ -747,6 +760,154 @@ def _make_frontier_step_fn(
         acc, q_bc, d_s2, n_bc = jax.lax.map(one_chunk, chunks)
         return (
             acc.reshape(n_chunks * q_pad, n_nodes)[:b],
+            q_bc.reshape(-1)[:b],
+            d_s2.reshape(-1)[:b],
+            n_bc.reshape(-1)[:b].astype(jnp.int32),
+        )
+
+    return jax.jit(fn)
+
+
+def _make_frontier_packed_step_fn(
+    ca: CompiledAutomaton,
+    n_nodes: int,
+    max_levels: int | None,
+    graph: LabeledGraph | None,
+    replication_factor: float,
+    block_size: int,
+    interpret: bool | None,
+    plan_store=None,
+    stats_epoch: int = 0,
+):
+    """The bitpacked fused-Pallas S2 executor
+    (``backend="frontier_kernel_packed"``).
+
+    Same Stage A and Stage B as :func:`_make_frontier_step_fn` — the
+    staged f32 tile tensor is shared (the packed kernel thresholds it to
+    bool in-kernel) and the level schedule is the identical plan object
+    — but the frontier carry is uint32 lane *words*: chunk lane ``q``
+    lives in word row ``q // 32``, bit ``q % 32``, so one
+    device-resident fixpoint answers ``QPACK`` = 256 queries at 1/32
+    the frontier HBM of f32 stacking.  Convergence is integer deltas
+    (``frontier != 0``) in the same ``lax.while_loop`` shape.
+
+    The §4.2 observed accounting is preserved *per lane*: the
+    (group, node) dedup bitmap stays packed in the carry, and each
+    level's newly-broadcast lanes are transiently bit-unpacked to f32
+    only for the per-lane count/degree dot products — q_bc/d_s2/n_bc
+    come back per query, identical to the f32 backend's meters.
+    """
+    from repro.kernels.frontier import frontier as fkernel
+    from repro.kernels.frontier import ops as fops
+
+    if graph is None:
+        raise ValueError(
+            "backend='frontier_kernel_packed' requires graph= "
+            "(the placement's global graph)"
+        )
+    if graph.n_nodes != n_nodes:
+        raise ValueError(f"graph has {graph.n_nodes} nodes, executor built for {n_nodes}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    staged = (
+        plan_store.staged_graph(graph, block_size, epoch=stats_epoch)
+        if plan_store is not None
+        else fops.stage_graph(graph, block_size)
+    )
+    plan = fops.build_level_schedule(ca, staged)
+    n_states, q_pad, v_pad = ca.n_states, plan.q_pad, plan.v_pad
+    q_pack = fops.QPACK
+    levels = max_levels if max_levels is not None else n_states * n_nodes
+
+    sgroups = symbol_set_groups(ca)
+    n_groups = max(len(sgroups), 1)
+    label_deg = (
+        plan_store.label_degrees(graph, [graph], graph.n_labels, v_pad, epoch=stats_epoch)
+        if plan_store is not None
+        else None
+    )
+    deg, payloads = _site_symbol_degrees(sgroups, [graph], v_pad, label_deg)
+    deg_c = jnp.asarray(deg[0])
+    pay_c = jnp.asarray(payloads)
+    state_rows = [jnp.asarray(states, jnp.int32) for _, states in sgroups]
+    bit_shifts = jnp.arange(32, dtype=jnp.uint32)
+
+    def lane_bits(words):  # (q_pad, v_pad) u32 -> (q_pack, v_pad) f32 0/1
+        bits = (words[:, None, :] >> bit_shifts[None, :, None]) & jnp.uint32(1)
+        return bits.astype(jnp.float32).reshape(q_pack, v_pad)
+
+    def fixpoint(f0):  # (n_states, q_pad, v_pad) uint32 lane words
+        flat0 = f0.reshape(n_states * q_pad, v_pad)
+        zero_q = jnp.zeros((q_pack,), jnp.float32)
+
+        def cond(state):
+            _, frontier, lev = state[:3]
+            return jnp.logical_and((frontier != 0).any(), lev < levels)
+
+        def body(state):
+            visited, frontier, lev, done, q_bc, d_s2, n_bc = state
+            fr3 = frontier.reshape(n_states, q_pad, v_pad)
+            new_done = []
+            for gi, rows in enumerate(state_rows):
+                now_g = jax.lax.reduce(
+                    fr3[rows], jnp.uint32(0), jax.lax.bitwise_or, (0,)
+                )  # (q_pad, v_pad) lane words
+                new_g = now_g & ~done[gi]
+                bits = lane_bits(new_g)  # per-lane 0/1, meter dots only
+                cnt = bits.sum(axis=1)
+                q_bc = q_bc + pay_c[gi] * cnt
+                n_bc = n_bc + cnt
+                d_s2 = d_s2 + EDGE_SYMBOLS * (bits * deg_c[gi][None, :]).sum(axis=1)
+                new_done.append(done[gi] | now_g)
+            done = jnp.stack(new_done) if new_done else done
+            fre = fops.extend_frontier_packed(
+                frontier, plan.union_members, n_states, q_pad
+            )
+            nxt = fkernel.packed_level_blocks(
+                fre, plan.tiles, plan.firsts, plan.valids, plan.tile_ids,
+                plan.f_rows, plan.f_cols, plan.o_rows, plan.o_cols,
+                plan.block_size, q_pad, interpret=interpret,
+                n_out_rows=n_states * q_pad,
+            )
+            new = nxt & ~visited
+            return visited | new, new, lev + 1, done, q_bc, d_s2, n_bc
+
+        visited, _, _, _, q_bc, d_s2, n_bc = jax.lax.while_loop(
+            cond, body,
+            (flat0, flat0, jnp.int32(0),
+             jnp.zeros((n_groups, q_pad, v_pad), jnp.uint32), zero_q, zero_q, zero_q),
+        )
+        vis3 = visited.reshape(n_states, q_pad, v_pad)
+        acc = jnp.zeros((q_pad, v_pad), jnp.uint32)
+        for qf in ca.accepting:
+            acc = acc | vis3[qf]
+        answers = lane_bits(acc)[:, :n_nodes] > 0
+        return answers, q_bc, d_s2 * replication_factor, n_bc
+
+    lane_ids = jnp.arange(q_pack, dtype=jnp.int32)
+
+    def fn(src, lbl, dst, mask, starts):
+        del src, lbl, dst, mask  # retrieval is modeled on the staged global tiles
+        b = starts.shape[0]
+        n_chunks = -(-b // q_pack)
+        pad = n_chunks * q_pack - b
+        if pad:
+            starts = jnp.concatenate([starts, jnp.zeros((pad,), starts.dtype)])
+        chunks = starts.reshape(n_chunks, q_pack)
+
+        def one_chunk(schunk):
+            # lanes carry distinct bits within a word row, so scatter-add
+            # IS scatter-OR even when two lanes start at the same node
+            f0 = (
+                jnp.zeros((n_states, q_pad, v_pad), jnp.uint32)
+                .at[ca.start, lane_ids // 32, schunk]
+                .add(jnp.uint32(1) << (lane_ids % 32).astype(jnp.uint32))
+            )
+            return fixpoint(f0)
+
+        acc, q_bc, d_s2, n_bc = jax.lax.map(one_chunk, chunks)
+        return (
+            acc.reshape(n_chunks * q_pack, n_nodes)[:b],
             q_bc.reshape(-1)[:b],
             d_s2.reshape(-1)[:b],
             n_bc.reshape(-1)[:b].astype(jnp.int32),
@@ -1146,7 +1307,9 @@ def s2_execute(
     """
     if device_arrays is not None:
         arrays = device_arrays
-    elif step_fn is None and backend in ("frontier_kernel", "frontier_kernel_sharded"):
+    elif step_fn is None and backend in (
+        "frontier_kernel", "frontier_kernel_packed", "frontier_kernel_sharded"
+    ):
         # the fused backends read only their staged tile plans; skip the
         # O(n_sites × max_edges) packing + transfer of unused site arrays
         arrays = {

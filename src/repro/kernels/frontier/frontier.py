@@ -45,6 +45,17 @@ predicate per step, not a tile pass.
 Boolean OR is implemented as saturating add in f32 (counts then >0) —
 MXU-native, exact for path-counting up to 2^24 (f32 integer range), and
 the wrappers threshold back to {0,1}.
+
+:func:`packed_level_blocks` is the **bitpacked** variant of the fused
+level: the frontier operand is ``uint32`` *words* with queries packed
+along the bit axis — the same 8-row tile minimum then carries 8 × 32 =
+256 query lanes per automaton state — and the per-step tile product
+becomes a bitwise OR-of-AND against the *same* staged f32 adjacency
+tiles (converted to a boolean mask in-kernel, so Stage A stages tiles
+once and serves both dtypes).  Bit-exact on the boolean semiring: word
+bit q of ``out[r, j]`` is ``OR_v (f[r, v] bit q  AND  a[v, j])``.  The
+scalar-prefetch schedule (``firsts`` zero-init, ``valids`` early-out,
+sorted (o_row, o_col) steps) is shared verbatim with the f32 kernel.
 """
 
 from __future__ import annotations
@@ -203,5 +214,95 @@ def fused_level_blocks(
         _fused_level_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_out_rows, v_pad), jnp.float32),
+        interpret=interpret,
+    )(firsts, valids, tile_ids, f_rows, f_cols, o_rows, o_cols, frontier, tiles)
+
+
+def _packed_level_kernel(
+    firsts_ref, valids_ref, tids_ref, frows_ref, fcols_ref, orows_ref, ocols_ref,
+    f_ref, a_ref, o_ref,
+):
+    """One grid step of the bitpacked fused level:
+
+        o[dst_state, :, ocol] |= OR-of-AND(f[frow, :, fcol], tiles[tid])
+
+    ``f_ref``/``o_ref`` are ``(q_pad, B)`` uint32 word blocks — bit q of
+    a word is query lane ``row·32 + q``'s frontier bit for that node.
+    The tile stays the staged f32 tensor; ``a != 0`` recovers the
+    boolean adjacency in-kernel, so one Stage-A staging serves both the
+    f32 matmul and the packed kernel.  The OR-of-AND is a broadcast
+    select to (q_pad, B, B) — lane words masked by the adjacency column
+    — reduced with bitwise OR over the contraction axis.  ``firsts`` /
+    ``valids`` keep the exact semantics of :func:`_fused_level_kernel`:
+    zero-init on the output block's first step, early-out on cover and
+    shape-class padding steps."""
+    i = pl.program_id(0)
+
+    @pl.when(firsts_ref[i] == 1)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(valids_ref[i] == 1)
+    def _accumulate():
+        f = f_ref[...]  # (q_pad, B) uint32 lane words
+        a = a_ref[0] != 0.0  # (B, B) bool — shared f32 staging
+        # contrib[r, v, j] = f[r, v] if a[v, j] else 0; OR over v
+        contrib = jnp.where(a[None, :, :], f[:, :, None], jnp.uint32(0))
+        o_ref[...] = o_ref[...] | jax.lax.reduce(
+            contrib, jnp.uint32(0), jax.lax.bitwise_or, (1,)
+        )
+
+
+def packed_level_blocks(
+    frontier: jax.Array,  # (n_rows * q_pad, v_pad) uint32 lane words
+    tiles: jax.Array,  # (n_tiles, B, B) f32 0/1 — the SAME Stage-A tensor
+    firsts: jax.Array,  # (n_steps,) int32 ∈ {0,1}
+    valids: jax.Array,  # (n_steps,) int32 ∈ {0,1}
+    tile_ids: jax.Array,  # (n_steps,) int32 into tiles
+    f_rows: jax.Array,  # (n_steps,) int32
+    f_cols: jax.Array,  # (n_steps,) int32
+    o_rows: jax.Array,  # (n_steps,) int32
+    o_cols: jax.Array,  # (n_steps,) int32
+    block_size: int,
+    q_pad: int,
+    interpret: bool = False,
+    n_out_rows: int | None = None,
+) -> jax.Array:
+    """One bitpacked BFS level over ALL transitions in a single
+    pallas_call — :func:`fused_level_blocks` with uint32 query-lane
+    words instead of f32 rows (32× the lane density per row).
+
+    Takes the SAME host-built schedule (``firsts``/``valids``/id arrays
+    from ``ops.build_level_schedule``) and the SAME staged f32 tile
+    tensor; only the frontier/output dtype and the per-step product
+    differ.  Returns the OR-accumulated word matrix (n_out_rows, v_pad)
+    uint32 — already boolean per bit, no thresholding needed.
+    """
+    n_rows, v_pad = frontier.shape
+    if n_out_rows is None:
+        n_out_rows = n_rows
+    n_steps = tile_ids.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(n_steps,),
+        in_specs=[
+            pl.BlockSpec(
+                (q_pad, block_size),
+                lambda i, fi, vl, ti, fr, fc, orw, oc: (fr[i], fc[i]),
+            ),
+            pl.BlockSpec(
+                (1, block_size, block_size),
+                lambda i, fi, vl, ti, fr, fc, orw, oc: (ti[i], 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (q_pad, block_size),
+            lambda i, fi, vl, ti, fr, fc, orw, oc: (orw[i], oc[i]),
+        ),
+    )
+    return pl.pallas_call(
+        _packed_level_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_out_rows, v_pad), jnp.uint32),
         interpret=interpret,
     )(firsts, valids, tile_ids, f_rows, f_cols, o_rows, o_cols, frontier, tiles)

@@ -28,7 +28,7 @@ what depends on the data distribution and what depends on the query):
   by :func:`extend_frontier` and recorded on the plan as
   ``union_members``.
 
-Three execution paths share the staged tiles:
+Four execution paths share the staged tiles:
 
 * **Fused (default)** — ``build_level_plan`` schedules every fan-in
   transition group's tile list of a compiled automaton into one grid
@@ -37,6 +37,14 @@ Three execution paths share the staged tiles:
   device-resident ``lax.while_loop`` (no host syncs between levels).
   The 8-row f32 tile minimum carries up to ``QPAD`` stacked queries, so
   ``multi_query_reach`` answers 8 start masks for the price of one.
+
+* **Bitpacked lanes** — the same Stage-B plan drives
+  ``packed_level_blocks``: frontier rows become uint32 lane *words*
+  (lane q = word row ``q // 32``, bit ``q % 32``), so the 8-row tile
+  minimum carries ``QPACK = 256`` query lanes per state at 1/32 the
+  frontier HBM of f32 stacking.  ``reach_fixpoint_packed`` converges on
+  integer deltas and ``multi_query_reach_packed`` chunks queries at 256
+  — bit-exact vs the f32 path on the boolean semiring.
 
 * **Site-sharded fused** — ``build_sharded_level_plan`` builds one such
   schedule per *site* from that site's own edge partition and pads each
@@ -69,12 +77,22 @@ import jax.numpy as jnp
 
 from repro.core.automaton import FWD, INV, CompiledAutomaton
 from repro.graph.structure import LabeledGraph
-from repro.kernels.frontier.frontier import frontier_step_blocks, fused_level_blocks
-from repro.kernels.frontier.ref import pack_blocks
+from repro.kernels.frontier.frontier import (
+    frontier_step_blocks,
+    fused_level_blocks,
+    packed_level_blocks,
+)
+from repro.kernels.frontier.ref import pack_blocks, pack_blocks_chunked
 
 # f32 sublane minimum: the row-tile rows one query would waste, used to
 # stack up to QPAD independent queries' frontiers per automaton state.
 QPAD = 8
+
+# Bitpacked lane capacity: the packed backend keeps the same QPAD word
+# rows per state but each row is uint32 lane *words*, so one tile-height
+# frontier block carries QPAD × 32 = 256 independent query lanes.  Lane
+# q lives in word row ``q // 32``, bit ``q % 32``.
+QPACK = QPAD * 32
 
 # offset-table key for the any-label union store (wildcard transitions);
 # real label ids are >= 0 so the key space is disjoint.
@@ -151,6 +169,9 @@ class StagedGraph:
     block_size: int
     tiles: jnp.ndarray  # (1 + sum nnz, B, B) f32; index 0 = zero cover tile
     offsets: dict[tuple[int, int], tuple[int, np.ndarray, np.ndarray]]
+    # total edge-list slices consumed by chunked Stage-A packing (0 when
+    # the one-shot path packed every label store in one pass)
+    staging_chunks: int = 0
 
 
 def _union_store(
@@ -180,12 +201,22 @@ def _union_store(
 
 
 def _label_tile_lists(
-    source: LabeledGraph | BlockedGraph, block_size: int
-) -> tuple[int, int, dict[tuple[int, int], tuple[np.ndarray, np.ndarray, np.ndarray]]]:
+    source: LabeledGraph | BlockedGraph,
+    block_size: int,
+    chunk_edges: int | None = None,
+) -> tuple[
+    int, int, dict[tuple[int, int], tuple[np.ndarray, np.ndarray, np.ndarray]], int
+]:
     """Host tile lists per (direction, label) — plus the two
     ``(direction, ANY_LABEL)`` union stores — from a raw graph (packing
     directly to numpy, no per-label device arrays) or an existing
-    :class:`BlockedGraph` (pulling its tiles back to host once)."""
+    :class:`BlockedGraph` (pulling its tiles back to host once).
+
+    With ``chunk_edges`` set, each label store streams through
+    :func:`pack_blocks_chunked` (byte-identical tiles, peak transient
+    host memory bounded by the chunk size); the last return value counts
+    the edge-list slices consumed (0 on the one-shot path)."""
+    staging_chunks = 0
     if isinstance(source, BlockedGraph):
         stores = {}
         for direction, store in ((FWD, source.fwd), (INV, source.inv)):
@@ -200,17 +231,30 @@ def _label_tile_lists(
             if len(src) == 0:
                 continue
             BUILD_COUNTERS["pack_blocks"] += 2
-            t, r, c, _ = pack_blocks(src, dst, g.n_nodes, block_size)
-            stores[(FWD, lid)] = (t, r, c)
-            t, r, c, _ = pack_blocks(dst, src, g.n_nodes, block_size)
-            stores[(INV, lid)] = (t, r, c)
+            if chunk_edges is None:
+                t, r, c, _ = pack_blocks(src, dst, g.n_nodes, block_size)
+                stores[(FWD, lid)] = (t, r, c)
+                t, r, c, _ = pack_blocks(dst, src, g.n_nodes, block_size)
+                stores[(INV, lid)] = (t, r, c)
+            else:
+                t, r, c, _, nc = pack_blocks_chunked(
+                    src, dst, g.n_nodes, block_size, chunk_edges
+                )
+                stores[(FWD, lid)] = (t, r, c)
+                staging_chunks += nc
+                t, r, c, _, nc = pack_blocks_chunked(
+                    dst, src, g.n_nodes, block_size, chunk_edges
+                )
+                stores[(INV, lid)] = (t, r, c)
+                staging_chunks += nc
         n_nodes = g.n_nodes
         v_pad = -(-g.n_nodes // block_size) * block_size
     for direction in (FWD, INV):
         u = _union_store(stores, direction)
         if u is not None:
             stores[(direction, ANY_LABEL)] = u
-    return n_nodes, v_pad, stores
+    BUILD_COUNTERS["staging_chunks"] += staging_chunks
+    return n_nodes, v_pad, stores, staging_chunks
 
 
 def _concat_stores(
@@ -232,13 +276,23 @@ def _concat_stores(
 
 
 def stage_graph(
-    source: LabeledGraph | BlockedGraph, block_size: int = 128
+    source: LabeledGraph | BlockedGraph,
+    block_size: int = 128,
+    chunk_edges: int | None = None,
 ) -> StagedGraph:
     """Stage A for the global fused backend: pack (if needed) and
     concatenate every label's tiles — plus the per-direction any-label
-    union stores — into one device tensor + offsets."""
+    union stores — into one device tensor + offsets.
+
+    ``chunk_edges`` streams the per-label packing in edge slices
+    (:func:`pack_blocks_chunked`): the staged tensor is byte-identical
+    to the one-shot path, but the transient per-edge key/inverse arrays
+    never exceed one chunk — the out-of-core knob for graphs whose edge
+    lists dwarf host RAM."""
     BUILD_COUNTERS["stage_graph"] += 1
-    n_nodes, v_pad, stores = _label_tile_lists(source, block_size)
+    n_nodes, v_pad, stores, staging_chunks = _label_tile_lists(
+        source, block_size, chunk_edges
+    )
     tiles, offsets = _concat_stores(stores, block_size)
     return StagedGraph(
         n_nodes=n_nodes,
@@ -246,6 +300,7 @@ def stage_graph(
         block_size=block_size,
         tiles=jnp.asarray(tiles),
         offsets=offsets,
+        staging_chunks=staging_chunks,
     )
 
 
@@ -291,7 +346,7 @@ def stage_sharded_graph(
     BUILD_COUNTERS["stage_sharded_graph"] += 1
     site_tiles, site_offsets = [], []
     for g in site_graphs:
-        _, _, stores = _label_tile_lists(g, block_size)
+        _, _, stores, _ = _label_tile_lists(g, block_size)
         t, offsets = _concat_stores(stores, block_size)
         site_tiles.append(t)
         site_offsets.append(offsets)
@@ -509,6 +564,33 @@ def extend_frontier(
     fr3 = frontier.reshape(n_states, q_pad, v_pad)
     ext = [fr3] + [
         fr3[jnp.asarray(m, jnp.int32)].max(axis=0, keepdims=True)
+        for m in union_members
+    ]
+    return jnp.concatenate(ext, axis=0).reshape(
+        (n_states + len(union_members)) * q_pad, v_pad
+    )
+
+
+def extend_frontier_packed(
+    frontier: jnp.ndarray,  # (n_states * q_pad, v_pad) uint32 lane words
+    union_members: tuple[tuple[int, ...], ...],
+    n_states: int,
+    q_pad: int,
+) -> jnp.ndarray:
+    """:func:`extend_frontier` on bitpacked lane words: the fan-in union
+    of member states is the bitwise OR of their word rows (each query
+    lane unions independently in its own bit)."""
+    if not union_members:
+        return frontier
+    v_pad = frontier.shape[-1]
+    fr3 = frontier.reshape(n_states, q_pad, v_pad)
+    ext = [fr3] + [
+        jax.lax.reduce(
+            fr3[jnp.asarray(m, jnp.int32)],
+            jnp.uint32(0),
+            jax.lax.bitwise_or,
+            (0,),
+        )[None]
         for m in union_members
     ]
     return jnp.concatenate(ext, axis=0).reshape(
@@ -979,6 +1061,173 @@ def multi_source_reach(
         ca, bg, np.asarray(start_mask, np.float32)[None, :],
         max_levels=max_levels, interpret=interpret, plan=plan,
     )[0]
+
+
+# ---------------------------------------------------------------------------
+# Bitpacked lane path: 256 query lanes per fixpoint (uint32 lane words)
+# ---------------------------------------------------------------------------
+
+
+def pack_lane_masks(masks: np.ndarray) -> np.ndarray:
+    """Pack Q ≤ QPACK per-lane 0/1 masks (Q, n) into QPAD uint32 word
+    rows (QPAD, n): lane q lands in word row ``q // 32``, bit ``q % 32``.
+    Lanes past Q stay zero — the cross-lane leakage invariant starts
+    here and the bitwise level/fixpoint ops preserve it."""
+    masks = np.atleast_2d(np.asarray(masks))
+    q, n = masks.shape
+    if q > QPACK:
+        raise ValueError(f"at most QPACK={QPACK} packed lanes, got {q}")
+    words = np.zeros((QPAD, n), np.uint32)
+    bits = masks != 0
+    for lane in range(q):
+        words[lane // 32] |= bits[lane].astype(np.uint32) << np.uint32(lane % 32)
+    return words
+
+
+def unpack_lane_words(words: np.ndarray, n_lanes: int) -> np.ndarray:
+    """Inverse of :func:`pack_lane_masks`: the first ``n_lanes`` lanes of
+    (QPAD, n) uint32 word rows as a (n_lanes, n) bool array."""
+    words = np.asarray(words)
+    out = np.zeros((n_lanes, words.shape[1]), bool)
+    for lane in range(n_lanes):
+        out[lane] = (words[lane // 32] >> np.uint32(lane % 32)) & 1 != 0
+    return out
+
+
+def stack_start_masks_packed(
+    plan: FusedLevelPlan, start_state: int, start_masks: np.ndarray
+) -> np.ndarray:
+    """Pack Q ≤ QPACK per-query start masks (Q, n_nodes) into the packed
+    frontier layout (n_states * q_pad, v_pad) uint32: word row
+    s·q_pad + w carries lanes [32w, 32w+32) of automaton state s."""
+    q = start_masks.shape[0]
+    if q > QPACK:
+        raise ValueError(f"at most QPACK={QPACK} stacked queries, got {q}")
+    f0 = np.zeros((plan.n_states, plan.q_pad, plan.v_pad), np.uint32)
+    f0[start_state, :, : start_masks.shape[1]] = pack_lane_masks(start_masks)
+    return f0.reshape(plan.n_states * plan.q_pad, plan.v_pad)
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "block_size", "q_pad", "interpret", "union_members", "n_states"
+    ),
+)
+def _packed_expand(
+    frontier, tiles, firsts, valids, tids, frows, fcols, orows, ocols,
+    *, block_size, q_pad, interpret, union_members, n_states,
+):
+    fre = extend_frontier_packed(frontier, union_members, n_states, q_pad)
+    return packed_level_blocks(
+        fre, tiles, firsts, valids, tids, frows, fcols, orows, ocols,
+        block_size, q_pad, interpret=interpret,
+        n_out_rows=n_states * q_pad,
+    )
+
+
+def expand_level_packed(
+    plan: FusedLevelPlan,
+    frontier: jnp.ndarray,  # (n_states * q_pad, v_pad) uint32 lane words
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One packed BFS level over all grounded transitions — ONE
+    pallas_call on the SAME Stage-B plan the f32 path uses (the staged
+    f32 tiles are thresholded to bool in-kernel)."""
+    return _packed_expand(
+        frontier, plan.tiles, plan.firsts, plan.valids, plan.tile_ids,
+        plan.f_rows, plan.f_cols, plan.o_rows, plan.o_cols,
+        block_size=plan.block_size, q_pad=plan.q_pad, interpret=interpret,
+        union_members=plan.union_members, n_states=plan.n_states,
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "block_size", "q_pad", "max_levels", "interpret", "union_members", "n_states"
+    ),
+)
+def _reach_fixpoint_packed(
+    frontier0, tiles, firsts, valids, tids, frows, fcols, orows, ocols,
+    *, block_size, q_pad, max_levels, interpret, union_members, n_states,
+):
+    """Device-resident packed BFS fixpoint: lax.while_loop over packed
+    levels, converged via integer deltas (``frontier != 0``) — all 256
+    lanes advance together and the loop exits when every lane's frontier
+    word is zero."""
+
+    def cond(state):
+        _, frontier, lev = state
+        return jnp.logical_and((frontier != 0).any(), lev < max_levels)
+
+    def body(state):
+        visited, frontier, lev = state
+        fre = extend_frontier_packed(frontier, union_members, n_states, q_pad)
+        nxt = packed_level_blocks(
+            fre, tiles, firsts, valids, tids, frows, fcols, orows, ocols,
+            block_size, q_pad, interpret=interpret,
+            n_out_rows=n_states * q_pad,
+        )
+        new = nxt & ~visited  # per-bit: newly discovered lanes only
+        return visited | new, new, lev + 1
+
+    visited, _, _ = jax.lax.while_loop(
+        cond, body, (frontier0, frontier0, jnp.int32(0))
+    )
+    return visited
+
+
+def reach_fixpoint_packed(
+    plan: FusedLevelPlan,
+    frontier0: jnp.ndarray,  # (n_states * q_pad, v_pad) uint32 lane words
+    max_levels: int = 64,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Visited lane words (same layout as ``frontier0``) at fixpoint."""
+    return _reach_fixpoint_packed(
+        frontier0, plan.tiles, plan.firsts, plan.valids, plan.tile_ids,
+        plan.f_rows, plan.f_cols, plan.o_rows, plan.o_cols,
+        block_size=plan.block_size, q_pad=plan.q_pad,
+        max_levels=max_levels, interpret=interpret,
+        union_members=plan.union_members, n_states=plan.n_states,
+    )
+
+
+def multi_query_reach_packed(
+    ca: CompiledAutomaton,
+    bg: BlockedGraph,
+    start_masks: np.ndarray,  # (Q, n_nodes) 0/1 — one row per query lane
+    max_levels: int = 64,
+    interpret: bool = True,
+    plan: FusedLevelPlan | None = None,
+) -> np.ndarray:
+    """Fixpoint reachability for Q bitpacked queries; returns (Q,
+    n_nodes) bool answer masks — bit-exact vs :func:`multi_query_reach`.
+
+    Queries ride the bit axis in chunks of QPACK = 256: each chunk is
+    ONE device-resident fixpoint over a frontier 32× denser than the
+    f32 stacking (which needs 32 sequential QPAD-chunks for the same
+    256 queries).  Pass a prebuilt ``plan`` to amortize schedule
+    construction — the SAME plan object serves both dtypes."""
+    start_masks = np.atleast_2d(np.asarray(start_masks))
+    if plan is None:
+        plan = build_level_plan(ca, bg)
+    n_q = start_masks.shape[0]
+    out = np.zeros((n_q, bg.n_nodes), bool)
+    for lo in range(0, n_q, QPACK):
+        chunk = start_masks[lo : lo + QPACK]
+        f0 = stack_start_masks_packed(plan, ca.start, chunk)
+        visited = np.asarray(
+            reach_fixpoint_packed(plan, jnp.asarray(f0), max_levels, interpret)
+        ).reshape(plan.n_states, plan.q_pad, plan.v_pad)
+        acc = np.zeros((plan.q_pad, plan.v_pad), np.uint32)
+        for qf in ca.accepting:
+            acc |= visited[qf]
+        out[lo : lo + chunk.shape[0]] = unpack_lane_words(acc, chunk.shape[0])[
+            :, : bg.n_nodes
+        ]
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -31,6 +31,54 @@ def pack_blocks(
     return tiles, rows, cols, v_pad
 
 
+def pack_blocks_chunked(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n_nodes: int,
+    block_size: int,
+    chunk_edges: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, int, int]:
+    """Streaming :func:`pack_blocks`: byte-identical tiles, but the edge
+    list is consumed in ``chunk_edges``-sized slices so peak host memory
+    *beyond the output tensor* is bounded by the chunk size, not |E|.
+
+    Two passes: pass 1 folds each chunk's distinct block keys into a
+    sorted union (fixing the tile layout and total nnz without ever
+    materializing the full per-edge key/inverse arrays the one-shot
+    ``np.unique`` needs); pass 2 allocates the final tile tensor once
+    and scatters each chunk's edges into it.  Key order is
+    ``block_col · nb + block_row`` — the one-shot sort order — so rows,
+    cols, and tile contents match :func:`pack_blocks` exactly.
+
+    Returns ``(tiles, rows, cols, v_pad, n_chunks)``.
+    """
+    chunk_edges = max(int(chunk_edges), 1)
+    v_pad = -(-n_nodes // block_size) * block_size
+    nb = v_pad // block_size
+    n_edges = len(src)
+    n_chunks = max(-(-n_edges // chunk_edges), 1)
+
+    uniq = np.zeros(0, np.int64)
+    for lo in range(0, n_edges, chunk_edges):
+        s, d = src[lo : lo + chunk_edges], dst[lo : lo + chunk_edges]
+        keys = (d // block_size).astype(np.int64) * nb + s // block_size
+        uniq = np.union1d(uniq, keys)  # stays sorted = pack_blocks order
+
+    nnz = len(uniq)
+    tiles = np.zeros((max(nnz, 1), block_size, block_size), np.float32)
+    rows = (uniq % nb).astype(np.int32)
+    cols = (uniq // nb).astype(np.int32)
+    for lo in range(0, n_edges, chunk_edges):
+        s, d = src[lo : lo + chunk_edges], dst[lo : lo + chunk_edges]
+        keys = (d // block_size).astype(np.int64) * nb + s // block_size
+        idx = np.searchsorted(uniq, keys)
+        tiles[idx, s % block_size, d % block_size] = 1.0
+    if nnz == 0:
+        rows = np.zeros(1, np.int32)
+        cols = np.zeros(1, np.int32)
+    return tiles, rows, cols, v_pad, n_chunks
+
+
 def frontier_step_ref(
     frontier: jax.Array, tiles: jax.Array, block_rows: jax.Array, block_cols: jax.Array,
     block_size: int,

@@ -207,6 +207,10 @@ class AsyncQueryService:
             from repro.kernels.frontier.ops import QPAD
 
             multiple = max(multiple, QPAD)
+        elif cfg.s2_backend == "frontier_kernel_packed":
+            from repro.kernels.frontier.ops import QPACK
+
+            multiple = max(multiple, QPACK)
         self._s2_fill = batcher.lane_fill_target(cfg.max_batch, multiple)
         # metrics state (exported as the stable `aio` summary block)
         self._admission = {c: metrics_mod._empty_admission_stats() for c in SLO_CLASSES}

@@ -5,9 +5,12 @@ and :meth:`ServiceMetrics.summary` reduces them into the stable schema the
 throughput benchmark serializes (queries/sec, p50/p95 latency, cache hit
 rates, per-strategy counts, symbol totals, plus the two-stage-compilation
 counters: executor-cache and plan-store hit/miss rates, and the sharded
-plans' grid-step padding accounting ``plan_pad_waste``, pushed by the
-service via :meth:`ServiceMetrics.set_cache_stats` each flush; all three
-are zeroed placeholders with the full key sets before the first flush).
+plans' grid-step padding accounting ``plan_pad_waste``, and the frontier
+memory-roofline block ``frontier_mem`` (per-dtype executor counts,
+frontier bytes and lane capacity per fixpoint chunk, chunked Stage-A
+slice count), pushed by the service via
+:meth:`ServiceMetrics.set_cache_stats` each flush; all four are zeroed
+placeholders with the full key sets before the first flush).
 
 The async runtime adds one more stable block, ``aio`` (queue depth and
 admission accept/reject counters per SLO class, batch-window fill
@@ -151,6 +154,23 @@ def _empty_pad_waste_stats() -> dict:
             "bucket_grid_steps": {}}
 
 
+def _empty_frontier_mem_stats() -> dict:
+    # frontier memory roofline block (ExecutorCache.frontier_mem_stats()
+    # + the plan store's chunked Stage-A counter): per-dtype executor
+    # counts, frontier bytes one fixpoint chunk carries per cached
+    # executor ("f32" = frontier_kernel/_sharded rows, "packed" =
+    # frontier_kernel_packed lane words — same bytes, 32x the lanes),
+    # query-lane capacity per chunk, and how many edge slices chunked
+    # Stage-A staging has consumed
+    return {
+        "executors": {"f32": 0, "packed": 0},
+        "frontier_bytes": {"f32": 0, "packed": 0},
+        "lane_capacity": {"f32": 0, "packed": 0},
+        "bytes_per_lane": {"f32": 0.0, "packed": 0.0},
+        "staging_chunks": 0,
+    }
+
+
 class ServiceMetrics:
     def __init__(self) -> None:
         self.records: list[QueryRecord] = []
@@ -165,6 +185,7 @@ class ServiceMetrics:
             "exec_cache": _empty_exec_cache_stats(),
             "plan_store": _empty_plan_store_stats(),
             "plan_pad_waste": _empty_pad_waste_stats(),
+            "frontier_mem": _empty_frontier_mem_stats(),
         }
         # async-runtime block: zeroed full-schema placeholder until an
         # AsyncQueryService pushes live numbers via set_aio_stats
@@ -181,17 +202,21 @@ class ServiceMetrics:
         exec_cache: dict | None = None,
         plan_store: dict | None = None,
         plan_pad_waste: dict | None = None,
+        frontier_mem: dict | None = None,
     ) -> None:
         """Install the current executor-cache / plan-store hit/miss
-        counters and the sharded plans' grid-step padding accounting
-        (the service pushes these every flush, so summaries and the
-        throughput benchmark see live two-stage-compilation rates)."""
+        counters, the sharded plans' grid-step padding accounting, and
+        the frontier memory-roofline block (the service pushes these
+        every flush, so summaries and the throughput benchmark see live
+        two-stage-compilation rates)."""
         if exec_cache is not None:
             self._cache_stats["exec_cache"] = dict(exec_cache)
         if plan_store is not None:
             self._cache_stats["plan_store"] = dict(plan_store)
         if plan_pad_waste is not None:
             self._cache_stats["plan_pad_waste"] = dict(plan_pad_waste)
+        if frontier_mem is not None:
+            self._cache_stats["frontier_mem"] = dict(frontier_mem)
 
     def record(self, rec: QueryRecord) -> None:
         now = time.perf_counter()
@@ -227,6 +252,7 @@ class ServiceMetrics:
             "exec_cache": dict(self._cache_stats["exec_cache"]),
             "plan_store": dict(self._cache_stats["plan_store"]),
             "plan_pad_waste": dict(self._cache_stats["plan_pad_waste"]),
+            "frontier_mem": dict(self._cache_stats["frontier_mem"]),
             "aio": dict(self._aio_stats),
         }
         if extra:

@@ -40,6 +40,7 @@ from repro.core import plans as plans_mod
 from repro.core import regex as rx
 from repro.core import strategies
 from repro.core.automaton import CompiledAutomaton
+from repro.serve import metrics
 
 # ---------------------------------------------------------------------------
 # Query normalization (α-equivalence up to commutative reordering)
@@ -424,3 +425,39 @@ class ExecutorCache:
             "builds": self.builds,
             "releases": self.releases,
         }
+
+    def frontier_mem_stats(self) -> dict:
+        """The frontier memory-roofline block of the serve summary
+        (schema: ``repro.serve.metrics._empty_frontier_mem_stats``).
+
+        Derived from the cached executors' signatures alone: every fused
+        executor's fixpoint chunk carries a ``(n_states · QPAD, v_pad)``
+        frontier operand at 4 bytes per element regardless of dtype —
+        f32 rows hold 8 query lanes per chunk, packed uint32 lane words
+        hold 256 — so ``bytes_per_lane`` is the roofline the dtypes
+        actually differ on (32×).  The ``staging_chunks`` counter comes
+        from the shared plan store's chunked Stage-A accounting."""
+        from repro.kernels.frontier import ops as fops
+
+        out = metrics._empty_frontier_mem_stats()
+        for entry in self._lru.values():
+            backend = entry.sig[9]
+            if backend == "frontier_kernel_packed":
+                dtype, lanes = "packed", fops.QPACK
+            elif backend in ("frontier_kernel", "frontier_kernel_sharded"):
+                dtype, lanes = "f32", fops.QPAD
+            else:
+                continue  # reference backend: no tiled frontier operand
+            n_states, n_nodes, block = entry.sig[0], entry.sig[4], entry.sig[10]
+            v_pad = -(-n_nodes // block) * block
+            nbytes = n_states * fops.QPAD * v_pad * 4
+            out["executors"][dtype] += 1
+            out["frontier_bytes"][dtype] += nbytes
+            out["lane_capacity"][dtype] += lanes
+        for dtype in ("f32", "packed"):
+            lanes = out["lane_capacity"][dtype]
+            out["bytes_per_lane"][dtype] = (
+                out["frontier_bytes"][dtype] / lanes if lanes else 0.0
+            )
+        out["staging_chunks"] = self.plan_store.staging_chunks
+        return out

@@ -66,10 +66,13 @@ class ServeConfig:
     max_levels: int | None = None
     # S2 executor backend: "reference" (shard_map gather/scatter),
     # "frontier_kernel" (fused Pallas level on the global tiles, 8
-    # queries per row tile), or "frontier_kernel_sharded" (fused Pallas
-    # level per site partition under shard_map, per-site cost meters) —
-    # see repro.kernels.frontier and serve/README.md for the selection
-    # matrix; the fused backends' tile block size below
+    # queries per row tile), "frontier_kernel_packed" (same staged
+    # tiles with the frontier bitpacked to uint32 lane words — 256
+    # query lanes per fixpoint at 1/32 the frontier HBM), or
+    # "frontier_kernel_sharded" (fused Pallas level per site partition
+    # under shard_map, per-site cost meters) — see repro.kernels.frontier
+    # and serve/README.md for the selection matrix; the fused backends'
+    # tile block size below
     s2_backend: str = "reference"
     s2_block_size: int = 128
     # smallest power-of-two shape class for the sharded backend's
@@ -374,6 +377,11 @@ class QueryService:
             from repro.kernels.frontier.ops import QPAD
 
             multiple = max(multiple, QPAD)
+        elif cfg.s2_backend == "frontier_kernel_packed":
+            # fill the packed kernel's 256 bit lanes before growing
+            from repro.kernels.frontier.ops import QPACK
+
+            multiple = max(multiple, QPACK)
 
         for group in batcher.group_by_signature(reqs, lambda r: r.sig):
             try:
@@ -524,6 +532,7 @@ class QueryService:
             exec_cache=self.exec_cache.stats(),
             plan_store=self.plan_store.stats(),
             plan_pad_waste=self.plan_store.pad_stats(),
+            frontier_mem=self.exec_cache.frontier_mem_stats(),
         )
         return [r.ticket for r in pending]
 
@@ -557,6 +566,7 @@ class QueryService:
             exec_cache=self.exec_cache.stats(),
             plan_store=self.plan_store.stats(),
             plan_pad_waste=self.plan_store.pad_stats(),
+            frontier_mem=self.exec_cache.frontier_mem_stats(),
         )
         return self.metrics.summary(
             extra={

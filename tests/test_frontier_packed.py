@@ -1,0 +1,307 @@
+"""Bitpacked frontier backend: cross-lane leakage property tests
+(random automata × graphs, Q ∈ {1, 8, 33, 256} bit-exact vs the f32
+fused backend and the host PAA, unused high bits provably zero through
+the fixpoint), packed-level oracle equivalence across all 256 lanes,
+packed-vs-f32 S2 executor equality on answers AND §4.2 meters, chunked
+Stage-A byte-identity, and an 8-device subprocess run (reusing the
+``test_multidevice`` harness pattern)."""
+
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import paa, strategies
+from repro.dist import compat
+from repro.graph.generators import random_labeled_graph
+from repro.graph.partition import Placement
+from repro.graph.structure import LabeledGraph, example_graph, to_device_graph
+from repro.kernels.frontier.ops import (
+    QPACK,
+    QPAD,
+    BUILD_COUNTERS,
+    build_level_plan,
+    expand_level_packed,
+    make_blocked_graph,
+    multi_query_reach,
+    multi_query_reach_packed,
+    pack_lane_masks,
+    reach_fixpoint_packed,
+    reset_build_counters,
+    stack_start_masks_packed,
+    stage_graph,
+    unpack_lane_words,
+)
+from repro.kernels.frontier.ref import (
+    fused_level_ref,
+    pack_blocks,
+    pack_blocks_chunked,
+)
+
+from tests.test_multidevice import CHILD_ENV, SUBPROCESS_TIMEOUT_S
+
+pytestmark = pytest.mark.timeout_s(SUBPROCESS_TIMEOUT_S + 60)
+
+
+def _sparse_label_graph():
+    """A graph whose vocabulary has a label with zero edges (l2), so
+    wildcard expansion and direct references both hit an empty store."""
+    rng = np.random.default_rng(5)
+    n_nodes, n_edges = 45, 200
+    src = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    dst = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    lbl = rng.choice([0, 1, 3], n_edges).astype(np.int32)  # label 2 never occurs
+    return LabeledGraph(n_nodes, src, lbl, dst, ["l0", "l1", "l2", "l3"])
+
+
+SWEEP = [
+    # (graph factory, block size, queries)
+    (lambda: example_graph(), 8, ["a* b b", "(a|b)+", "a* b^-1"]),
+    (
+        lambda: random_labeled_graph(50, 220, 3, seed=7),
+        16,
+        ["l0 (l1|l2)* l0", "l0* .^-1"],
+    ),
+    (_sparse_label_graph, 8, ["l0 l2 l1", "(l0|l2)+", ". l3^-1"]),
+]
+
+
+@pytest.mark.parametrize("case", range(len(SWEEP)))
+def test_packed_level_matches_dense_oracle_across_256_lanes(case):
+    """One packed level == the dense per-transition oracle on random
+    frontiers, checked lane-by-lane for ALL QPACK=256 bit lanes (every
+    bit position of every word row carries an independent query)."""
+    factory, block, queries = SWEEP[case]
+    g = factory()
+    bg = make_blocked_graph(g, block_size=block)
+    rng = np.random.default_rng(case)
+    for expr in queries[:2]:
+        ca = paa.compile_query(expr, g)
+        plan = build_level_plan(ca, bg)
+        lanes = (rng.random((ca.n_states, QPACK, bg.v_pad)) < 0.25).astype(np.float32)
+        lanes[:, :, g.n_nodes :] = 0.0  # padded node columns stay empty
+        packed = np.stack([pack_lane_masks(lanes[s]) for s in range(ca.n_states)])
+        got_w = np.asarray(
+            expand_level_packed(
+                plan, jnp.asarray(packed.reshape(-1, bg.v_pad)), interpret=True
+            )
+        ).reshape(ca.n_states, QPAD, bg.v_pad)
+        got = np.stack(
+            [unpack_lane_words(got_w[s], QPACK) for s in range(ca.n_states)]
+        )
+        # the f32 oracle sees 8 lanes at a time; sweep all 32 groups
+        for c in range(QPACK // QPAD):
+            sl = lanes[:, c * QPAD : (c + 1) * QPAD]
+            want = fused_level_ref(ca, g, sl)
+            assert (got[:, c * QPAD : (c + 1) * QPAD] == (want != 0)).all(), (expr, c)
+
+
+@pytest.mark.parametrize("case", range(len(SWEEP)))
+@pytest.mark.parametrize("n_queries", [1, 8, 33, 256])
+def test_packed_reach_bit_exact_vs_f32_and_paa(case, n_queries):
+    """Q packed queries are bit-exact vs the f32 stacked fixpoint AND
+    the single-source PAA oracle — lanes must not leak across bits,
+    word rows, or the 8→256 chunking boundary."""
+    factory, block, queries = SWEEP[case]
+    g = factory()
+    dg = to_device_graph(g)
+    bg = make_blocked_graph(g, block_size=block)
+    rng = np.random.default_rng(100 * case + n_queries)
+    for expr in queries[:2]:
+        ca = paa.compile_query(expr, g)
+        plan = build_level_plan(ca, bg)
+        starts = rng.choice(g.n_nodes, size=n_queries, replace=True)
+        masks = np.zeros((n_queries, g.n_nodes), np.float32)
+        masks[np.arange(n_queries), starts] = 1.0
+        got = multi_query_reach_packed(ca, bg, masks, interpret=True, plan=plan)
+        if n_queries <= 33:  # f32 path is slow past a few chunks
+            want_f32 = multi_query_reach(ca, bg, masks, interpret=True, plan=plan)
+            assert (got == want_f32).all(), expr
+        oracle = {}
+        for i, s in enumerate(starts):
+            if int(s) not in oracle:
+                oracle[int(s)] = np.asarray(paa.answers_single_source(ca, dg, int(s)))
+            assert (got[i] == oracle[int(s)]).all(), (expr, i, int(s))
+
+
+@pytest.mark.parametrize("n_queries", [1, 33, 250])
+def test_unused_high_lanes_stay_zero_through_fixpoint(n_queries):
+    """Lanes ≥ Q never light up anywhere in the visited set: whole word
+    rows past ceil(Q/32) stay zero, and within the last partial word
+    every bit ≥ Q mod 32 stays zero — through the entire fixpoint, for
+    every automaton state (not just accepting)."""
+    g = random_labeled_graph(50, 220, 3, seed=7)
+    bg = make_blocked_graph(g, block_size=16)
+    ca = paa.compile_query("l0 (l1|l2)* l0", g)
+    plan = build_level_plan(ca, bg)
+    rng = np.random.default_rng(n_queries)
+    masks = (rng.random((n_queries, g.n_nodes)) < 0.1).astype(np.float32)
+    f0 = stack_start_masks_packed(plan, ca.start, masks)
+    visited = np.asarray(
+        reach_fixpoint_packed(plan, jnp.asarray(f0), interpret=True)
+    ).reshape(ca.n_states, plan.q_pad, plan.v_pad)
+    full_rows = -(-n_queries // 32)
+    assert (visited[:, full_rows:] == 0).all()
+    rem = n_queries % 32
+    if rem:
+        high = visited[:, full_rows - 1] >> np.uint32(rem)
+        assert (high == 0).all()
+
+
+def _one_site_placement(g) -> Placement:
+    return Placement(
+        g, 1, [np.arange(g.n_edges, dtype=np.int64)], np.ones(g.n_edges, np.int32)
+    )
+
+
+def test_packed_executor_matches_f32_answers_and_meters():
+    """backend="frontier_kernel_packed" through s2_execute: answers AND
+    every §4.2 observed meter (broadcast symbols, unicast symbols,
+    broadcast count) equal the f32 fused backend's, query for query."""
+    g = random_labeled_graph(40, 170, 4, seed=3)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    placement = _one_site_placement(g)
+    starts = np.arange(0, g.n_nodes, 3, dtype=np.int32)
+    for q in ["(l0|l1)* l2 .^-1", "l0 (l1|l2)* l0", ". l1"]:
+        ca = paa.compile_query(q, g)
+        acc_pk, costs_pk = strategies.s2_execute(
+            mesh, placement, ca, starts,
+            backend="frontier_kernel_packed", block_size=8,
+        )
+        acc_f32, costs_f32 = strategies.s2_execute(
+            mesh, placement, ca, starts, backend="frontier_kernel", block_size=8
+        )
+        assert (acc_pk == acc_f32).all(), q
+        for cp, cf, s in zip(costs_pk, costs_f32, starts):
+            assert cp.broadcast_symbols == pytest.approx(cf.broadcast_symbols), (q, s)
+            assert cp.unicast_symbols == pytest.approx(cf.unicast_symbols), (q, s)
+            assert cp.n_broadcasts == cf.n_broadcasts, (q, s)
+
+
+def test_packed_executor_chunks_past_qpack():
+    """More than QPACK queries split into multiple packed fixpoint
+    chunks; answers stay bit-exact vs the PAA oracle across the seam."""
+    g = example_graph()
+    dg = to_device_graph(g)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    placement = _one_site_placement(g)
+    ca = paa.compile_query("(a|b)+", g)
+    n_q = QPACK + 5
+    starts = (np.arange(n_q) % g.n_nodes).astype(np.int32)
+    acc, costs = strategies.s2_execute(
+        mesh, placement, ca, starts,
+        backend="frontier_kernel_packed", block_size=8,
+    )
+    assert len(costs) == n_q
+    oracle = {}
+    for i, s in enumerate(starts):
+        if int(s) not in oracle:
+            oracle[int(s)] = np.asarray(paa.answers_single_source(ca, dg, int(s)))
+        assert (acc[i] == oracle[int(s)]).all(), (i, int(s))
+
+
+def test_chunked_staging_is_byte_identical():
+    """pack_blocks_chunked == pack_blocks byte-for-byte (tiles AND the
+    row/col block offsets), and the chunked stage_graph artifact equals
+    the one-shot one while reporting its chunk count."""
+    g = random_labeled_graph(60, 700, 3, seed=11)
+    for lid in range(g.n_labels):
+        src, dst = g.edges_with_label(lid)
+        t1, r1, c1, v1 = pack_blocks(src, dst, g.n_nodes, 16)
+        t2, r2, c2, v2, n_chunks = pack_blocks_chunked(src, dst, g.n_nodes, 16, 37)
+        assert v1 == v2 and n_chunks == -(-len(src) // 37)
+        assert t1.shape == t2.shape and (t1 == t2).all(), lid
+        assert (r1 == r2).all() and (c1 == c2).all(), lid
+
+    s_one = stage_graph(g, block_size=16)
+    reset_build_counters()
+    s_chk = stage_graph(g, block_size=16, chunk_edges=37)
+    assert s_one.staging_chunks == 0
+    assert s_chk.staging_chunks == int(BUILD_COUNTERS["staging_chunks"]) > 1
+    assert (np.asarray(s_one.tiles) == np.asarray(s_chk.tiles)).all()
+    assert s_one.offsets.keys() == s_chk.offsets.keys()
+    for key in s_one.offsets:
+        base1, r1, c1 = s_one.offsets[key]
+        base2, r2, c2 = s_chk.offsets[key]
+        assert base1 == base2 and (r1 == r2).all() and (c1 == c2).all(), key
+
+
+def test_packed_backend_on_8_devices():
+    """Acceptance criterion: on ≥2 real (forced-host) devices the packed
+    backend answers 256 stacked queries bit-exactly vs the host PAA
+    oracle and the f32 fused backend's meters."""
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np
+        import jax
+        from repro.core import paa, strategies
+        from repro.dist import compat
+        from repro.graph.generators import random_labeled_graph
+        from repro.graph.partition import Placement
+        from repro.graph.structure import to_device_graph
+
+        assert len(jax.devices()) == 8
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
+        g = random_labeled_graph(48, 200, 4, seed=9)
+        dg = to_device_graph(g)
+        placement = Placement(
+            g, 1, [np.arange(g.n_edges, dtype=np.int64)],
+            np.ones(g.n_edges, np.int32),
+        )
+        ca = paa.compile_query("l0 (l1|l2)* l3", g)
+
+        # 256 queries = one full packed chunk on a multi-device mesh
+        starts = (np.arange(256) % 48).astype(np.int32)
+        acc, costs = strategies.s2_execute(
+            mesh, placement, ca, starts,
+            backend="frontier_kernel_packed", block_size=8,
+        )
+        assert len(costs) == 256
+        oracle = {}
+        for i, s in enumerate(starts):
+            if int(s) not in oracle:
+                oracle[int(s)] = np.asarray(
+                    paa.answers_single_source(ca, dg, int(s)))
+            assert (acc[i] == oracle[int(s)]).all(), (i, int(s))
+
+        # meters agree with the f32 backend on a small batch
+        small = starts[:8]
+        _, c_pk = strategies.s2_execute(
+            mesh, placement, ca, small,
+            backend="frontier_kernel_packed", block_size=8,
+        )
+        _, c_f32 = strategies.s2_execute(
+            mesh, placement, ca, small,
+            backend="frontier_kernel", block_size=8,
+        )
+        for a, b in zip(c_pk, c_f32):
+            assert abs(a.broadcast_symbols - b.broadcast_symbols) < 1e-6
+            assert abs(a.unicast_symbols - b.unicast_symbols) < 1e-6
+            assert a.n_broadcasts == b.n_broadcasts
+        print("PACKED_8DEV_OK")
+        """
+    )
+    try:
+        res = subprocess.run(
+            [sys.executable, "-c", script],
+            capture_output=True, text=True, timeout=SUBPROCESS_TIMEOUT_S,
+            env=CHILD_ENV,
+            cwd="/root/repo",
+        )
+    except subprocess.TimeoutExpired as e:
+        out = (e.stdout or b"").decode() if isinstance(e.stdout, bytes) else (e.stdout or "")
+        err = (e.stderr or b"").decode() if isinstance(e.stderr, bytes) else (e.stderr or "")
+        pytest.fail(
+            f"8-device subprocess exceeded {SUBPROCESS_TIMEOUT_S}s\n"
+            f"--- child stdout ---\n{out}\n--- child stderr ---\n{err}"
+        )
+    assert res.returncode == 0 and "PACKED_8DEV_OK" in res.stdout, (
+        f"8-device subprocess failed (rc={res.returncode})\n"
+        f"--- child stdout ---\n{res.stdout}\n--- child stderr ---\n{res.stderr}"
+    )
