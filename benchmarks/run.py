@@ -26,6 +26,7 @@ import types
 KNOWN = [
     "table1", "table2", "fig2", "fig3", "fig4", "scenario6", "roofline",
     "serve", "serve_async", "frontier", "dist", "plans", "packed",
+    "witness",
 ]
 
 # --regress gate: a fresh run may not be slower than the checked-in
@@ -38,10 +39,13 @@ KNOWN = [
 #                  design; its tail is rejection-shaped, not a signal)
 #   packed       — every fixpoint_ms* leaf of BENCH_frontier_packed.json
 #                  (f32 and packed multi-query fixpoints at Q=8/64/256)
+#   witness      — every fixpoint_ms* leaf of BENCH_witness.json (the
+#                  witness level-carry overhead and the closure fast path)
 REGRESS_FACTOR = 1.3
 DIST_JSON = "BENCH_frontier_sharded.json"
 SERVE_ASYNC_JSON = "BENCH_serve_async.json"
 PACKED_JSON = "BENCH_frontier_packed.json"
+WITNESS_JSON = "BENCH_witness.json"
 
 
 def _collect_ms(
@@ -123,14 +127,15 @@ def main() -> None:
         ("dist", DIST_JSON, "fixpoint_ms", None),
         ("serve_async", SERVE_ASYNC_JSON, "p99_ms", "overload"),
         ("packed", PACKED_JSON, "fixpoint_ms", None),
+        ("witness", WITNESS_JSON, "fixpoint_ms", None),
     ]
     baselines: dict[str, dict] = {}
     if args.regress:
         gated = [g for g in gates if g[0] in selected]
         if not gated:
             ap.error(
-                "--regress gates the `dist`, `serve_async`, and `packed` "
-                "subsets; include at least one in names"
+                "--regress gates the `dist`, `serve_async`, `packed`, and "
+                "`witness` subsets; include at least one in names"
             )
         for name, path, _, _ in gated:
             try:
@@ -153,6 +158,7 @@ def main() -> None:
         serve_throughput,
         table1_complexity,
         table2_queries,
+        witness,
     )
 
     common.set_platform_note(args.platform)
@@ -171,6 +177,7 @@ def main() -> None:
         ("dist", frontier_sharded),
         ("plans", plan_store),
         ("packed", types.SimpleNamespace(run=roofline.run_packed)),
+        ("witness", witness),
     ]
 
     for name, mod in modules:

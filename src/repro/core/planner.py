@@ -25,11 +25,130 @@ import numpy as np
 
 from repro.core import cost_model, estimation, paa
 from repro.core import regex as rx
-from repro.core.automaton import CompiledAutomaton
+from repro.core.automaton import (
+    NFA,
+    CompiledAutomaton,
+    GroundedTransition,
+    Transition,
+)
 from repro.core.cost_model import NetworkParams, StrategyChoice
 from repro.core.strategies import EDGE_SYMBOLS, StrategyCost
 from repro.graph.partition import OverlayNetwork, Placement
 from repro.graph.structure import LabeledGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryClass:
+    """Structural query class (Casel & Schmid's easy-fragment view):
+    the planner routes the easy classes to specialized kernel schedules
+    instead of the general PAA fixpoint.
+
+    ``kind`` is one of
+
+    * ``"single_label"`` — the whole query matches exactly one symbol
+      (a label, a label class, a wildcard, or a union of such): one BFS
+      expansion answers it, so the fixpoint runs with ``max_levels=1``;
+    * ``"closure"`` — pure transitive closure ``A*`` of a symbol set:
+      the product automaton collapses to ONE state
+      (:func:`reduce_automaton`), halving-or-better the fused grid work
+      and the frontier carry;
+    * ``"bounded"`` — a concatenation of symbol atoms: answer depth is
+      exactly ``length``, so the fixpoint is level-capped instead of
+      run-to-convergence;
+    * ``"general"`` — everything else (the full PAA path).
+
+    ``atoms`` records the sorted (name, inverse) symbol atoms for the
+    easy kinds (informational — execution works from the *grounded*
+    automaton); sorting makes structurally-equal queries classify
+    identically regardless of operand order.  The *decision* (kind,
+    length) is label-name-free, hence stable under α-renaming."""
+
+    kind: str
+    atoms: tuple = ()
+    length: int = 0
+
+
+_ATOM_NODES = (rx.Label, rx.Wildcard, rx.LabelClass)
+
+
+def _atom_symbols(node: rx.Node) -> tuple | None:
+    """The sorted symbol set a single-hop node matches, or None if the
+    node is not a one-symbol atom (unions of atoms count: ``(a|b)`` is
+    one hop over {a, b})."""
+    if isinstance(node, rx.Label):
+        return ((node.name, node.inverse),)
+    if isinstance(node, rx.Wildcard):
+        return (("*", node.inverse),)
+    if isinstance(node, rx.LabelClass):
+        return tuple(sorted((n, node.inverse) for n in node.names))
+    if isinstance(node, rx.Union):
+        parts = [_atom_symbols(p) for p in node.parts]
+        if any(p is None for p in parts):
+            return None
+        return tuple(sorted({s for p in parts for s in p}))
+    return None
+
+
+def classify_query(query: str | rx.Node) -> QueryClass:
+    """Classify a query into the planner's fast-path classes.  Accepts
+    the query string or a parsed AST."""
+    ast = rx.parse(query) if isinstance(query, str) else query
+    atoms = _atom_symbols(ast)
+    if atoms is not None:
+        return QueryClass(kind="single_label", atoms=atoms, length=1)
+    if isinstance(ast, rx.Star):
+        inner = _atom_symbols(ast.inner)
+        if inner is not None:
+            return QueryClass(kind="closure", atoms=inner)
+    if isinstance(ast, rx.Concat):
+        parts = [_atom_symbols(p) for p in ast.parts]
+        if all(p is not None for p in parts):
+            merged = tuple(sorted({s for p in parts for s in p}))
+            return QueryClass(kind="bounded", atoms=merged, length=len(parts))
+    return QueryClass(kind="general")
+
+
+def reduce_automaton(ca: CompiledAutomaton, qc: QueryClass) -> CompiledAutomaton:
+    """The closure fast path: a pure-closure query's product automaton
+    collapses to ONE state with a self-loop per distinct grounded symbol
+    — reachability over the symbol-set edge relation IS the answer set
+    (start accepting covers the empty run).  Every executor, meter, and
+    the witness layer read only the *grounded* transitions, so the
+    reduced NFA carries placeholder label names.  Non-closure classes
+    return ``ca`` unchanged (their fast path is the level cap, not a
+    state reduction)."""
+    if qc.kind != "closure":
+        return ca
+    syms = sorted({(t.label_id, t.direction) for t in ca.transitions})
+    nfa = NFA(
+        n_states=1,
+        start=0,
+        accepting=frozenset({0}),
+        transitions=tuple(
+            Transition(0, f"#{lid}", dirn, 0) for lid, dirn in syms
+        ),
+    )
+    return CompiledAutomaton(
+        nfa=nfa,
+        n_states=1,
+        start=0,
+        accepting=(0,),
+        transitions=tuple(
+            GroundedTransition(0, lid, dirn, 0) for lid, dirn in syms
+        ),
+        n_labels=ca.n_labels,
+    )
+
+
+def fast_path_max_levels(qc: QueryClass) -> int | None:
+    """The fixpoint level cap a query class licenses: 1 for single-label
+    queries, the concatenation length for bounded queries, None (run to
+    convergence) otherwise."""
+    if qc.kind == "single_label":
+        return 1
+    if qc.kind == "bounded":
+        return qc.length
+    return None
 
 
 @dataclasses.dataclass
@@ -45,6 +164,7 @@ class QueryPlan:
     s2_cost_cap: int  # §3.6: interrupt S2 beyond this many expansions
     forecast_symbols: dict[str, float]  # expected network traffic per strategy
     decision_quantile: float = 0.9
+    query_class: QueryClass | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +183,7 @@ class PlanEstimates:
     q_bc_samples: np.ndarray  # raw rollout Q_bc samples
     d_s2_samples: np.ndarray  # raw rollout D_s2 samples (not yet D_s1-bounded)
     wildcard: bool
+    query_class: QueryClass | None = None  # structural fast-path class
 
 
 def probe_network(net: OverlayNetwork, placement: Placement, seed: int = 0) -> NetworkParams:
@@ -115,6 +236,7 @@ def estimate_query(
         q_bc_samples=np.array([r.q_bc for r in rollouts], float),
         d_s2_samples=np.array([r.d_s2 for r in rollouts], float),
         wildcard=wildcard,
+        query_class=classify_query(ast),
     )
 
 
@@ -187,6 +309,7 @@ def decide_strategy(
         s2_cost_cap=cap,
         forecast_symbols=forecast,
         decision_quantile=decision_quantile,
+        query_class=est.query_class,
     )
 
 

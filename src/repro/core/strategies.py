@@ -47,6 +47,7 @@ from repro.core import paa
 from repro.dist import sharding as shd
 from repro.core.automaton import FWD, CompiledAutomaton
 from repro.core.regex import Node, has_wildcard, labels_of, query_size
+from repro.core.witness import INF_LEVEL
 from repro.graph.partition import OverlayNetwork, Placement
 from repro.graph.structure import LabeledGraph
 
@@ -420,6 +421,7 @@ def make_s2_step_fn(
     plan_store=None,
     stats_epoch: int = 0,
     bucket_floor: int | None = None,
+    semantics: str = "pairs",
 ):
     """Build the jitted batched S2 executor.
 
@@ -484,21 +486,32 @@ def make_s2_step_fn(
     ``stats_epoch``, so only the cheap automaton-dependent Stage-B
     schedule is built here.  Without a store each build stages its own
     artifacts (the pre-refactor behavior, right for one-off callers).
+
+    ``semantics="witness"`` grows every backend's fixpoint carry by one
+    f32 *discovery level* plane (see :mod:`repro.core.witness`) and
+    appends one output: ``levels`` of shape (B, n_states, n_nodes) f32,
+    always LAST (after the sharded backend's ``d_s2_sites``) — level 1
+    at the start pair, +1 per expansion, ``INF_LEVEL`` when unreached.
+    Answers and meters are unchanged; the levels are the implicit parent
+    pointers :func:`repro.core.witness.reconstruct_path` walks.
     """
+    if semantics not in ("pairs", "witness"):
+        raise ValueError(f"semantics must be 'pairs' or 'witness', got {semantics!r}")
     if backend == "frontier_kernel":
         return _make_frontier_step_fn(
             ca, n_nodes, max_levels, graph, replication_factor, block_size,
-            interpret, plan_store, stats_epoch,
+            interpret, plan_store, stats_epoch, semantics,
         )
     if backend == "frontier_kernel_packed":
         return _make_frontier_packed_step_fn(
             ca, n_nodes, max_levels, graph, replication_factor, block_size,
-            interpret, plan_store, stats_epoch,
+            interpret, plan_store, stats_epoch, semantics,
         )
     if backend == "frontier_kernel_sharded":
         return _make_frontier_sharded_step_fn(
             ca, n_nodes, mesh, site_axes, batch_axis, max_levels, placement,
             block_size, interpret, plan_store, stats_epoch, bucket_floor,
+            semantics,
         )
     if backend != "reference":
         raise ValueError(
@@ -506,6 +519,7 @@ def make_s2_step_fn(
             "'frontier_kernel_packed', or 'frontier_kernel_sharded', "
             f"got {backend!r}"
         )
+    witness = semantics == "witness"
     n_states = ca.n_states
     levels = max_levels if max_levels is not None else n_states * n_nodes
 
@@ -561,11 +575,11 @@ def make_s2_step_fn(
             done0 = jnp.zeros((n_groups, n_nodes), jnp.bool_)
 
             def cond(state):
-                _, frontier, lev, _, _, _, _ = state
+                frontier, lev = state[1], state[2]
                 return jnp.logical_and(frontier.any(), lev < levels)
 
             def body(state):
-                visited, frontier, lev, done, q_bc, d_s2, n_bc = state
+                visited, frontier, lev, done, q_bc, d_s2, n_bc = state[:7]
                 # observed accounting: the frontier is exactly the set of
                 # newly visited product states; a broadcast is charged the
                 # first time a (symbol-set, node) pair appears across ALL
@@ -588,14 +602,27 @@ def make_s2_step_fn(
                 if new_done:
                     done = jnp.stack(new_done)
                 new = jnp.logical_and(expand(frontier), jnp.logical_not(visited))
-                return jnp.logical_or(visited, new), new, lev + 1, done, q_bc, d_s2, n_bc
+                out = (
+                    jnp.logical_or(visited, new), new, lev + 1, done,
+                    q_bc, d_s2, n_bc,
+                )
+                if witness:
+                    # expand() pmax-merges over site_axes, so `new` (and
+                    # thus the stamped levels) is identical on every site
+                    levmap = jnp.where(
+                        new, lev.astype(jnp.float32) + 2.0, state[7]
+                    )
+                    out = out + (levmap,)
+                return out
 
-            visited, _, _, _, q_bc, d_s2, n_bc = jax.lax.while_loop(
-                cond,
-                body,
-                (visited0, visited0, jnp.int32(0), done0,
-                 jnp.float32(0), jnp.float32(0), jnp.int32(0)),
+            state0 = (
+                visited0, visited0, jnp.int32(0), done0,
+                jnp.float32(0), jnp.float32(0), jnp.int32(0),
             )
+            if witness:
+                state0 = state0 + (jnp.where(visited0, 1.0, INF_LEVEL),)
+            final = jax.lax.while_loop(cond, body, state0)
+            visited, q_bc, d_s2, n_bc = final[0], final[4], final[5], final[6]
             acc = jnp.zeros((n_nodes,), jnp.bool_)
             for qf in ca.accepting:
                 acc = jnp.logical_or(acc, visited[qf])
@@ -603,6 +630,8 @@ def make_s2_step_fn(
             # answers the broadcast, so sum the per-site counts
             for ax in site_axes:
                 d_s2 = jax.lax.psum(d_s2, ax)
+            if witness:
+                return acc, q_bc, d_s2, n_bc, final[7]
             return acc, q_bc, d_s2, n_bc
 
         return jax.vmap(one_query)(starts)
@@ -612,17 +641,22 @@ def make_s2_step_fn(
     # check_vma=False is required: JAX 0.4.x has no replication rule for
     # the BFS while_loop (NotImplementedError under check_rep=True)
     out_b = P(batch_axis) if batch_axis else P()
+    out_specs = (
+        P(batch_axis, None) if batch_axis else P(None, None),
+        out_b,
+        out_b,
+        out_b,
+    )
+    if witness:
+        out_specs = out_specs + (
+            P(batch_axis, None, None) if batch_axis else P(None, None, None),
+        )
     return jax.jit(
         shd.shard_map(
             local,
             mesh=mesh,
             in_specs=(spec_e, spec_e, spec_e, spec_e, spec_b),
-            out_specs=(
-                P(batch_axis, None) if batch_axis else P(None, None),
-                out_b,
-                out_b,
-                out_b,
-            ),
+            out_specs=out_specs,
             check_vma=False,
         )
     )
@@ -638,6 +672,7 @@ def _make_frontier_step_fn(
     interpret: bool | None,
     plan_store=None,
     stats_epoch: int = 0,
+    semantics: str = "pairs",
 ):
     """The fused-Pallas S2 executor (``backend="frontier_kernel"``).
 
@@ -679,6 +714,7 @@ def _make_frontier_step_fn(
     )
     plan = fops.build_level_schedule(ca, staged)
     n_states, q_pad, v_pad = ca.n_states, plan.q_pad, plan.v_pad
+    witness = semantics == "witness"
     levels = max_levels if max_levels is not None else n_states * n_nodes
 
     sgroups = symbol_set_groups(ca)
@@ -704,7 +740,7 @@ def _make_frontier_step_fn(
             return jnp.logical_and((frontier > 0).any(), lev < levels)
 
         def body(state):
-            visited, frontier, lev, done, q_bc, d_s2, n_bc = state
+            visited, frontier, lev, done, q_bc, d_s2, n_bc = state[:7]
             fr3 = frontier.reshape(n_states, q_pad, v_pad)
             new_done = []
             for gi, rows in enumerate(state_rows):
@@ -727,18 +763,33 @@ def _make_frontier_step_fn(
             )
             nxt = jnp.minimum(counts, 1.0)
             new = nxt * (1.0 - visited)
-            return jnp.maximum(visited, new), new, lev + 1, done, q_bc, d_s2, n_bc
+            out = (
+                jnp.maximum(visited, new), new, lev + 1, done, q_bc, d_s2, n_bc
+            )
+            if witness:
+                levmap = jnp.where(
+                    new > 0, lev.astype(jnp.float32) + 2.0, state[7]
+                )
+                out = out + (levmap,)
+            return out
 
-        visited, _, _, _, q_bc, d_s2, n_bc = jax.lax.while_loop(
-            cond, body,
-            (flat0, flat0, jnp.int32(0),
-             jnp.zeros((n_groups, q_pad, v_pad), jnp.float32), zero_q, zero_q, zero_q),
+        state0 = (
+            flat0, flat0, jnp.int32(0),
+            jnp.zeros((n_groups, q_pad, v_pad), jnp.float32), zero_q, zero_q, zero_q,
         )
+        if witness:
+            state0 = state0 + (jnp.where(flat0 > 0, 1.0, INF_LEVEL),)
+        final = jax.lax.while_loop(cond, body, state0)
+        visited, q_bc, d_s2, n_bc = final[0], final[4], final[5], final[6]
         vis3 = visited.reshape(n_states, q_pad, v_pad)
         acc = jnp.zeros((q_pad, v_pad), jnp.float32)
         for qf in ca.accepting:
             acc = jnp.maximum(acc, vis3[qf])
-        return acc[:, :n_nodes] > 0, q_bc, d_s2 * replication_factor, n_bc
+        out = (acc[:, :n_nodes] > 0, q_bc, d_s2 * replication_factor, n_bc)
+        if witness:
+            levmap = final[7].reshape(n_states, q_pad, v_pad)
+            out = out + (levmap.transpose(1, 0, 2)[:, :, :n_nodes],)
+        return out
 
     def fn(src, lbl, dst, mask, starts):
         del src, lbl, dst, mask  # retrieval is modeled on the staged global tiles
@@ -757,13 +808,19 @@ def _make_frontier_step_fn(
             )
             return fixpoint(f0)
 
-        acc, q_bc, d_s2, n_bc = jax.lax.map(one_chunk, chunks)
-        return (
+        out = jax.lax.map(one_chunk, chunks)
+        acc, q_bc, d_s2, n_bc = out[:4]
+        res = (
             acc.reshape(n_chunks * q_pad, n_nodes)[:b],
             q_bc.reshape(-1)[:b],
             d_s2.reshape(-1)[:b],
             n_bc.reshape(-1)[:b].astype(jnp.int32),
         )
+        if witness:
+            res = res + (
+                out[4].reshape(n_chunks * q_pad, n_states, n_nodes)[:b],
+            )
+        return res
 
     return jax.jit(fn)
 
@@ -778,6 +835,7 @@ def _make_frontier_packed_step_fn(
     interpret: bool | None,
     plan_store=None,
     stats_epoch: int = 0,
+    semantics: str = "pairs",
 ):
     """The bitpacked fused-Pallas S2 executor
     (``backend="frontier_kernel_packed"``).
@@ -796,6 +854,12 @@ def _make_frontier_packed_step_fn(
     level's newly-broadcast lanes are transiently bit-unpacked to f32
     only for the per-lane count/degree dot products — q_bc/d_s2/n_bc
     come back per query, identical to the f32 backend's meters.
+
+    Under ``semantics="witness"`` the visited/frontier words stay
+    packed, but discovery levels are per *lane*: the level plane is
+    (n_states, QPACK, v_pad) f32 per chunk — 32× the packed word bytes
+    (the price of witnesses at QPACK density; the 1/32 frontier-HBM win
+    applies to the boolean carry only).
     """
     from repro.kernels.frontier import frontier as fkernel
     from repro.kernels.frontier import ops as fops
@@ -817,6 +881,7 @@ def _make_frontier_packed_step_fn(
     plan = fops.build_level_schedule(ca, staged)
     n_states, q_pad, v_pad = ca.n_states, plan.q_pad, plan.v_pad
     q_pack = fops.QPACK
+    witness = semantics == "witness"
     levels = max_levels if max_levels is not None else n_states * n_nodes
 
     sgroups = symbol_set_groups(ca)
@@ -836,6 +901,13 @@ def _make_frontier_packed_step_fn(
         bits = (words[:, None, :] >> bit_shifts[None, :, None]) & jnp.uint32(1)
         return bits.astype(jnp.float32).reshape(q_pack, v_pad)
 
+    def state_lane_bits(flat):  # (n_states*q_pad, v_pad) u32 -> bool lanes
+        w3 = flat.reshape(n_states, q_pad, v_pad)
+        bits = (
+            (w3[:, :, None, :] >> bit_shifts[None, None, :, None]) & jnp.uint32(1)
+        ) != 0
+        return bits.reshape(n_states, q_pack, v_pad)
+
     def fixpoint(f0):  # (n_states, q_pad, v_pad) uint32 lane words
         flat0 = f0.reshape(n_states * q_pad, v_pad)
         zero_q = jnp.zeros((q_pack,), jnp.float32)
@@ -845,7 +917,7 @@ def _make_frontier_packed_step_fn(
             return jnp.logical_and((frontier != 0).any(), lev < levels)
 
         def body(state):
-            visited, frontier, lev, done, q_bc, d_s2, n_bc = state
+            visited, frontier, lev, done, q_bc, d_s2, n_bc = state[:7]
             fr3 = frontier.reshape(n_states, q_pad, v_pad)
             new_done = []
             for gi, rows in enumerate(state_rows):
@@ -870,19 +942,36 @@ def _make_frontier_packed_step_fn(
                 n_out_rows=n_states * q_pad,
             )
             new = nxt & ~visited
-            return visited | new, new, lev + 1, done, q_bc, d_s2, n_bc
+            out = (visited | new, new, lev + 1, done, q_bc, d_s2, n_bc)
+            if witness:
+                levmap = jnp.where(
+                    state_lane_bits(new),
+                    lev.astype(jnp.float32) + 2.0,
+                    state[7],
+                )
+                out = out + (levmap,)
+            return out
 
-        visited, _, _, _, q_bc, d_s2, n_bc = jax.lax.while_loop(
-            cond, body,
-            (flat0, flat0, jnp.int32(0),
-             jnp.zeros((n_groups, q_pad, v_pad), jnp.uint32), zero_q, zero_q, zero_q),
+        state0 = (
+            flat0, flat0, jnp.int32(0),
+            jnp.zeros((n_groups, q_pad, v_pad), jnp.uint32), zero_q, zero_q, zero_q,
         )
+        if witness:
+            state0 = state0 + (
+                jnp.where(state_lane_bits(flat0), 1.0, INF_LEVEL),
+            )
+        final = jax.lax.while_loop(cond, body, state0)
+        visited, q_bc, d_s2, n_bc = final[0], final[4], final[5], final[6]
         vis3 = visited.reshape(n_states, q_pad, v_pad)
         acc = jnp.zeros((q_pad, v_pad), jnp.uint32)
         for qf in ca.accepting:
             acc = acc | vis3[qf]
         answers = lane_bits(acc)[:, :n_nodes] > 0
-        return answers, q_bc, d_s2 * replication_factor, n_bc
+        out = (answers, q_bc, d_s2 * replication_factor, n_bc)
+        if witness:
+            # (n_states, q_pack, v_pad) -> (q_pack, n_states, n_nodes)
+            out = out + (final[7].transpose(1, 0, 2)[:, :, :n_nodes],)
+        return out
 
     lane_ids = jnp.arange(q_pack, dtype=jnp.int32)
 
@@ -905,13 +994,19 @@ def _make_frontier_packed_step_fn(
             )
             return fixpoint(f0)
 
-        acc, q_bc, d_s2, n_bc = jax.lax.map(one_chunk, chunks)
-        return (
+        out = jax.lax.map(one_chunk, chunks)
+        acc, q_bc, d_s2, n_bc = out[:4]
+        res = (
             acc.reshape(n_chunks * q_pack, n_nodes)[:b],
             q_bc.reshape(-1)[:b],
             d_s2.reshape(-1)[:b],
             n_bc.reshape(-1)[:b].astype(jnp.int32),
         )
+        if witness:
+            res = res + (
+                out[4].reshape(n_chunks * q_pack, n_states, n_nodes)[:b],
+            )
+        return res
 
     return jax.jit(fn)
 
@@ -967,6 +1062,7 @@ def _make_frontier_sharded_step_fn(
     plan_store=None,
     stats_epoch: int = 0,
     bucket_floor: int | None = None,
+    semantics: str = "pairs",
 ):
     """The site-sharded fused-Pallas S2 executor
     (``backend="frontier_kernel_sharded"``).
@@ -1025,6 +1121,16 @@ def _make_frontier_sharded_step_fn(
     The start batch is sharded over ``batch_axis`` (as in the reference
     backend): each batch shard runs its own q_pad-chunked fixpoints
     against the full (replicated-over-batch) site tiles.
+
+    Under ``semantics="witness"`` each device stamps discovery levels on
+    its own (ring-iteration) clock, and the final plane is ``pmin``-ed
+    over the site axes.  Ring-iteration levels are not BFS levels, but
+    they stay *valid* for strict-decrease reconstruction: at the device
+    achieving a pair's minimum level the discovery was local (a
+    ring-delivered discovery implies a neighbor with a smaller level,
+    contradicting minimality), so a strictly-smaller-level product
+    predecessor exists among that device's edges ⊆ global edges.  The
+    levels output rides LAST, after ``d_s2_sites``.
     """
     from repro.kernels.frontier import frontier as fkernel
     from repro.kernels.frontier import ops as fops
@@ -1069,6 +1175,7 @@ def _make_frontier_sharded_step_fn(
         plan_store.record_plan_pad_waste(plan)
     n_states, q_pad, v_pad = ca.n_states, plan.q_pad, plan.v_pad
     union_members = plan.union_members
+    witness = semantics == "witness"
     levels = max_levels if max_levels is not None else n_states * n_nodes
     # a discovery may need up to axis_size ring hops to reach the site
     # holding the next edge, so the iteration budget scales accordingly
@@ -1128,7 +1235,7 @@ def _make_frontier_sharded_step_fn(
                 return jnp.logical_and(active, lev < levels)
 
             def body(state):
-                visited, pending, lev, _, buf, done, q_bc, d_site, n_bc = state
+                visited, pending, lev, _, buf, done, q_bc, d_site, n_bc = state[:9]
                 fr3 = pending.reshape(n_states, q_pad, v_pad)
                 # §4.2 meters on this device's pending stream: every
                 # product state enters pending exactly once per device
@@ -1174,10 +1281,18 @@ def _make_frontier_sharded_step_fn(
                     for ax in mesh.axis_names:
                         if int(mesh.shape[ax]) > 1:
                             active = jax.lax.psum(active.astype(jnp.int32), ax) > 0
-                return (
+                out = (
                     jnp.maximum(visited, new), new, lev + 1, active, new,
                     done, q_bc, d_site, n_bc,
                 )
+                if witness:
+                    # this device's clock: ring-delivered discoveries
+                    # stamp the iteration they arrived, pmin'd at the end
+                    levmap = jnp.where(
+                        new > 0, lev.astype(jnp.float32) + 2.0, state[9]
+                    )
+                    out = out + (levmap,)
+                return out
 
             state = (
                 flat0, flat0, jnp.int32(0), jnp.asarray(True),
@@ -1185,14 +1300,23 @@ def _make_frontier_sharded_step_fn(
                 jnp.zeros((n_groups, q_pad, v_pad), jnp.float32),
                 zero_q, jnp.zeros((s_local, q_pad), jnp.float32), zero_q,
             )
-            visited, _, _, _, _, _, q_bc, d_site, n_bc = jax.lax.while_loop(
-                cond, body, state
-            )
+            if witness:
+                state = state + (jnp.where(flat0 > 0, 1.0, INF_LEVEL),)
+            final = jax.lax.while_loop(cond, body, state)
+            visited, q_bc, d_site, n_bc = final[0], final[6], final[7], final[8]
             vis3 = visited.reshape(n_states, q_pad, v_pad)
             acc = jnp.zeros((q_pad, v_pad), jnp.float32)
             for qf in ca.accepting:
                 acc = jnp.maximum(acc, vis3[qf])
-            return acc[:, :n_nodes] > 0, q_bc, d_site, n_bc
+            out = (acc[:, :n_nodes] > 0, q_bc, d_site, n_bc)
+            if witness:
+                levmap = final[9]
+                for ax in site_axes:
+                    if int(mesh.shape[ax]) > 1:
+                        levmap = jax.lax.pmin(levmap, ax)
+                lev3 = levmap.reshape(n_states, q_pad, v_pad)
+                out = out + (lev3.transpose(1, 0, 2)[:, :, :n_nodes],)
+            return out
 
         b = starts.shape[0]
         n_chunks = -(-b // q_pad)
@@ -1209,19 +1333,25 @@ def _make_frontier_sharded_step_fn(
             )
             return fixpoint(f0.reshape(n_states * q_pad, v_pad))
 
-        acc, q_bc, d_site, n_bc = jax.lax.map(one_chunk, chunks)
+        out = jax.lax.map(one_chunk, chunks)
+        acc, q_bc, d_site, n_bc = out[:4]
         # d_site: (n_chunks, s_local, q_pad) -> (s_local, B)
         d_site = d_site.transpose(1, 0, 2).reshape(s_local, n_chunks * q_pad)[:, :b]
         d_total = d_site.sum(axis=0)
         for ax in site_axes:
             d_total = jax.lax.psum(d_total, ax)
-        return (
+        res = (
             acc.reshape(n_chunks * q_pad, n_nodes)[:b],
             q_bc.reshape(-1)[:b],
             d_total,
             n_bc.reshape(-1)[:b].astype(jnp.int32),
             d_site,
         )
+        if witness:
+            res = res + (
+                out[4].reshape(n_chunks * q_pad, n_states, n_nodes)[:b],
+            )
+        return res
 
     spec_s = lambda extra: P(site_axes, *([None] * extra))  # noqa: E731
     b_ax = batch_axis if batch_axis and batch_axis in mesh.axis_names else None
@@ -1236,6 +1366,15 @@ def _make_frontier_sharded_step_fn(
         # is device-major, so sharding it over site_axes hands each
         # device exactly its member sites of this bucket
         bucket_specs += [spec_s(3)] + [spec_s(1)] * 7
+    out_specs = (
+        P(b_ax, None) if b_ax else P(None, None),
+        spec_b, spec_b, spec_b,
+        P(site_axes, b_ax),  # per-site × per-query response meters
+    )
+    if witness:
+        out_specs = out_specs + (
+            P(b_ax, None, None) if b_ax else P(None, None, None),
+        )
     sharded = shd.shard_map(
         local,
         mesh=mesh,
@@ -1245,11 +1384,7 @@ def _make_frontier_sharded_step_fn(
             spec_b,  # starts: sharded over the batch axis, every site sees
             # its batch shard's full frontier (the broadcast half)
         ),
-        out_specs=(
-            P(b_ax, None) if b_ax else P(None, None),
-            spec_b, spec_b, spec_b,
-            P(site_axes, b_ax),  # per-site × per-query response meters
-        ),
+        out_specs=out_specs,
         check_vma=False,
     )
 
@@ -1276,7 +1411,10 @@ def s2_execute(
     plan_store=None,
     stats_epoch: int = 0,
     bucket_floor: int | None = None,
-) -> tuple[np.ndarray, list[StrategyCost]]:
+    semantics: str = "pairs",
+) -> tuple[np.ndarray, list[StrategyCost]] | tuple[
+    np.ndarray, list[StrategyCost], np.ndarray
+]:
     """Run the batched S2 executor for ``start_nodes``.
 
     Returns ``(answers, costs)``: answers (B, V) bool, plus one *observed*
@@ -1286,6 +1424,12 @@ def s2_execute(
     convention by dividing the summed per-site responses by the placement's
     replication factor K (an average — per-query matched-edge replication
     may deviate slightly).
+
+    Under ``semantics="witness"`` (the ``step_fn``, if prebuilt, must
+    have been built with the same semantics) the return is a 3-tuple
+    ``(answers, costs, levels)`` with levels (B, n_states, n_nodes) f32
+    discovery levels — feed them to
+    :func:`repro.core.witness.reconstruct_path`.
 
     ``step_fn`` accepts a prebuilt executor from :func:`make_s2_step_fn`
     (e.g. from the serve layer's executor cache) so repeated query classes
@@ -1327,7 +1471,7 @@ def s2_execute(
             replication_factor=placement.replication_factor,
             block_size=block_size, interpret=interpret, placement=placement,
             plan_store=plan_store, stats_epoch=stats_epoch,
-            bucket_floor=bucket_floor,
+            bucket_floor=bucket_floor, semantics=semantics,
         )
     out = step_fn(
         jnp.asarray(arrays["src"]),
@@ -1337,7 +1481,13 @@ def s2_execute(
         jnp.asarray(np.asarray(start_nodes, np.int32)),
     )
     acc, q_bc, d_s2, n_bc = out[:4]
-    d_sites = np.asarray(out[4]) if len(out) > 4 else None  # (n_sites, B)
+    extras = out[4:]
+    levels = None
+    if semantics == "witness":
+        # the levels plane is always the LAST extra output
+        levels = np.asarray(extras[-1])  # (B, n_states, n_nodes)
+        extras = extras[:-1]
+    d_sites = np.asarray(extras[0]) if extras else None  # (n_sites, B)
     q_bc, d_s2, n_bc = (np.asarray(a) for a in (q_bc, d_s2, n_bc))
     k_rep = max(placement.replication_factor, 1e-9)
     costs = [
@@ -1353,4 +1503,6 @@ def s2_execute(
         )
         for i in range(len(q_bc))
     ]
+    if semantics == "witness":
+        return np.asarray(acc), costs, levels
     return np.asarray(acc), costs

@@ -76,6 +76,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.automaton import FWD, INV, CompiledAutomaton
+from repro.core.witness import INF_LEVEL
 from repro.graph.structure import LabeledGraph
 from repro.kernels.frontier.frontier import (
     frontier_step_blocks,
@@ -598,6 +599,30 @@ def extend_frontier_packed(
     )
 
 
+def extend_frontier_sum(
+    frontier: jnp.ndarray,  # (n_states * q_pad, v_pad) f32 run counts
+    union_members: tuple[tuple[int, ...], ...],
+    n_states: int,
+    q_pad: int,
+) -> jnp.ndarray:
+    """:func:`extend_frontier` on the counting semiring: fan-in union
+    rows must be the SUM of the member states' count rows, not the max —
+    ``Σ_src f[src] @ A`` is literal there (no saturation to hide under).
+    Used by :func:`count_paths_bounded`; the boolean fixpoints keep the
+    max form."""
+    if not union_members:
+        return frontier
+    v_pad = frontier.shape[-1]
+    fr3 = frontier.reshape(n_states, q_pad, v_pad)
+    ext = [fr3] + [
+        fr3[jnp.asarray(m, jnp.int32)].sum(axis=0, keepdims=True)
+        for m in union_members
+    ]
+    return jnp.concatenate(ext, axis=0).reshape(
+        (n_states + len(union_members)) * q_pad, v_pad
+    )
+
+
 # ---------------------------------------------------------------------------
 # Fused level plan: all transitions of a level as one grid
 # ---------------------------------------------------------------------------
@@ -1000,6 +1025,130 @@ def reach_fixpoint(
     )
 
 
+@partial(
+    jax.jit,
+    static_argnames=(
+        "block_size", "q_pad", "max_levels", "interpret", "union_members", "n_states"
+    ),
+)
+def _reach_fixpoint_levels(
+    frontier0, tiles, firsts, valids, tids, frows, fcols, orows, ocols,
+    *, block_size, q_pad, max_levels, interpret, union_members, n_states,
+):
+    """:func:`_reach_fixpoint` with the witness carry: alongside the
+    visited plane, one f32 *discovery level* per (state row, node) —
+    start pairs at level 1, a pair first reached by expansion ``i`` at
+    level ``i + 1``, :data:`repro.core.witness.INF_LEVEL` when never
+    reached.  Levels are implicit parent pointers (every discovered pair
+    has a strictly-smaller-level product predecessor by construction),
+    so the carry grows by exactly one plane — no per-edge pointers."""
+
+    def cond(state):
+        _, frontier, lev, _ = state
+        return jnp.logical_and((frontier > 0).any(), lev < max_levels)
+
+    def body(state):
+        visited, frontier, lev, levels = state
+        fre = extend_frontier(frontier, union_members, n_states, q_pad)
+        counts = fused_level_blocks(
+            fre, tiles, firsts, valids, tids, frows, fcols, orows, ocols,
+            block_size, q_pad, interpret=interpret,
+            n_out_rows=n_states * q_pad,
+        )
+        nxt = jnp.minimum(counts, 1.0)
+        new = nxt * (1.0 - visited)  # exact on {0,1} floats
+        levels = jnp.where(new > 0, lev.astype(jnp.float32) + 2.0, levels)
+        return jnp.maximum(visited, new), new, lev + 1, levels
+
+    levels0 = jnp.where(frontier0 > 0, 1.0, INF_LEVEL)
+    visited, _, _, levels = jax.lax.while_loop(
+        cond, body, (frontier0, frontier0, jnp.int32(0), levels0)
+    )
+    return visited, levels
+
+
+def reach_fixpoint_levels(
+    plan: FusedLevelPlan,
+    frontier0: jnp.ndarray,  # (n_states * q_pad, v_pad) f32 0/1
+    max_levels: int = 64,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """:func:`reach_fixpoint` + BFS discovery levels (same layout, f32,
+    ``INF_LEVEL`` = unreached) for host-side witness reconstruction."""
+    return _reach_fixpoint_levels(
+        frontier0, plan.tiles, plan.firsts, plan.valids, plan.tile_ids,
+        plan.f_rows, plan.f_cols, plan.o_rows, plan.o_cols,
+        block_size=plan.block_size, q_pad=plan.q_pad,
+        max_levels=max_levels, interpret=interpret,
+        union_members=plan.union_members, n_states=plan.n_states,
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "block_size", "q_pad", "n_levels", "interpret", "union_members",
+        "n_states", "accepting",
+    ),
+)
+def _count_paths_bounded(
+    frontier0, tiles, firsts, valids, tids, frows, fcols, orows, ocols,
+    *, block_size, q_pad, n_levels, interpret, union_members, n_states, accepting,
+):
+    acc_rows = jnp.asarray(accepting, jnp.int32)
+
+    def accept_sum(counts3):
+        return counts3[acc_rows].sum(axis=0)
+
+    def body(_, state):
+        counts, total = state
+        fre = extend_frontier_sum(counts, union_members, n_states, q_pad)
+        nxt = fused_level_blocks(
+            fre, tiles, firsts, valids, tids, frows, fcols, orows, ocols,
+            block_size, q_pad, interpret=interpret,
+            n_out_rows=n_states * q_pad,
+        )
+        nxt3 = nxt.reshape(n_states, q_pad, -1)
+        return nxt, total + accept_sum(nxt3)
+
+    f3 = frontier0.reshape(n_states, q_pad, -1)
+    total0 = accept_sum(f3)
+    _, total = jax.lax.fori_loop(0, n_levels, body, (frontier0, total0))
+    return total
+
+
+def count_paths_bounded(
+    plan: FusedLevelPlan,
+    frontier0: jnp.ndarray,  # (n_states * q_pad, v_pad) f32 start counts
+    accepting: tuple[int, ...],
+    n_levels: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Bounded-length counting-semiring sum over the SAME Stage-B level
+    schedule the boolean fixpoint runs: drop the saturating ``min(·, 1)``
+    clamp so the fused tile products accumulate exact run counts, sum
+    fan-in unions instead of maxing them (:func:`extend_frontier_sum`),
+    and total the accepting rows after every one of ``n_levels``
+    expansions.  Returns (q_pad, v_pad) f32: per stacked query, the
+    number of accepting *runs* of length ≤ ``n_levels`` from its starts
+    to each node (run-based counting — an ambiguous automaton counts
+    each of a walk's runs once; see :func:`repro.core.witness.count_paths`,
+    the host oracle).
+
+    Caveats: counts are exact f32 integers only below 2**24 (bound the
+    length accordingly), and wildcard transitions ride the saturated
+    any-label union store, so a wildcard hop counts parallel edges that
+    carry different labels once, not per label — match the oracle on
+    wildcard-free automata."""
+    return _count_paths_bounded(
+        frontier0, plan.tiles, plan.firsts, plan.valids, plan.tile_ids,
+        plan.f_rows, plan.f_cols, plan.o_rows, plan.o_cols,
+        block_size=plan.block_size, q_pad=plan.q_pad, n_levels=n_levels,
+        interpret=interpret, union_members=plan.union_members,
+        n_states=plan.n_states, accepting=tuple(accepting),
+    )
+
+
 def stack_start_masks(
     plan: FusedLevelPlan, start_state: int, start_masks: np.ndarray
 ) -> np.ndarray:
@@ -1186,6 +1335,78 @@ def reach_fixpoint_packed(
 ) -> jnp.ndarray:
     """Visited lane words (same layout as ``frontier0``) at fixpoint."""
     return _reach_fixpoint_packed(
+        frontier0, plan.tiles, plan.firsts, plan.valids, plan.tile_ids,
+        plan.f_rows, plan.f_cols, plan.o_rows, plan.o_cols,
+        block_size=plan.block_size, q_pad=plan.q_pad,
+        max_levels=max_levels, interpret=interpret,
+        union_members=plan.union_members, n_states=plan.n_states,
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "block_size", "q_pad", "max_levels", "interpret", "union_members", "n_states"
+    ),
+)
+def _reach_fixpoint_packed_levels(
+    frontier0, tiles, firsts, valids, tids, frows, fcols, orows, ocols,
+    *, block_size, q_pad, max_levels, interpret, union_members, n_states,
+):
+    """:func:`_reach_fixpoint_packed` with the witness carry.  The
+    visited set stays bitpacked, but discovery levels are per *lane*, so
+    the level plane is (n_states, q_pad·32, v_pad) f32 — 32× the packed
+    word bytes (the price of witnesses at QPACK density; see the
+    frontier README's witness-carry contract).  Newly-set bits of each
+    expansion are transiently unpacked to stamp their lanes' levels."""
+    bit_shifts = jnp.arange(32, dtype=jnp.uint32)
+
+    def cond(state):
+        _, frontier, lev, _ = state
+        return jnp.logical_and((frontier != 0).any(), lev < max_levels)
+
+    def body(state):
+        visited, frontier, lev, levels = state
+        fre = extend_frontier_packed(frontier, union_members, n_states, q_pad)
+        nxt = packed_level_blocks(
+            fre, tiles, firsts, valids, tids, frows, fcols, orows, ocols,
+            block_size, q_pad, interpret=interpret,
+            n_out_rows=n_states * q_pad,
+        )
+        new = nxt & ~visited  # per-bit: newly discovered lanes only
+        w3 = new.reshape(n_states, q_pad, -1)
+        bits = (
+            (w3[:, :, None, :] >> bit_shifts[None, None, :, None]) & jnp.uint32(1)
+        ) != 0
+        bits = bits.reshape(n_states, q_pad * 32, -1)
+        levels = jnp.where(bits, lev.astype(jnp.float32) + 2.0, levels)
+        return visited | new, new, lev + 1, levels
+
+    v_pad = frontier0.shape[-1]
+    f3 = frontier0.reshape(n_states, q_pad, v_pad)
+    bits0 = (
+        (f3[:, :, None, :] >> bit_shifts[None, None, :, None]) & jnp.uint32(1)
+    ) != 0
+    levels0 = jnp.where(
+        bits0.reshape(n_states, q_pad * 32, v_pad), 1.0, INF_LEVEL
+    )
+    visited, _, _, levels = jax.lax.while_loop(
+        cond, body, (frontier0, frontier0, jnp.int32(0), levels0)
+    )
+    return visited, levels
+
+
+def reach_fixpoint_packed_levels(
+    plan: FusedLevelPlan,
+    frontier0: jnp.ndarray,  # (n_states * q_pad, v_pad) uint32 lane words
+    max_levels: int = 64,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """:func:`reach_fixpoint_packed` + per-lane discovery levels:
+    returns (visited lane words, levels) where levels is (n_states,
+    QPACK, v_pad) f32 — lane q of word row ``q // 32``, bit ``q % 32``
+    unpacks to level row q."""
+    return _reach_fixpoint_packed_levels(
         frontier0, plan.tiles, plan.firsts, plan.valids, plan.tile_ids,
         plan.f_rows, plan.f_cols, plan.o_rows, plan.o_cols,
         block_size=plan.block_size, q_pad=plan.q_pad,

@@ -286,8 +286,16 @@ class AsyncQueryService:
         slo: str = "latency",
         strategy: str | None = None,
         timeout_s: float | None = None,
+        semantics: str | None = None,
     ) -> Answers:
         """Admit one request and await its answers.
+
+        ``semantics="witness"`` makes this an ``answers_with_witness``
+        request: the resolved :class:`Answers` carries discovery-level
+        planes for :meth:`QueryService.witness_path`.  Witness requests
+        ride their own batching lanes — the semantics folds into the
+        automaton signature, so pairs batches never pay the witness
+        carry.
 
         Raises :class:`AdmissionRejected` when the tenant's token bucket
         or the SLO class's queue bound rejects it, ``ValueError`` on
@@ -308,7 +316,7 @@ class AsyncQueryService:
             raise AdmissionRejected("queue_full", self._retry_after(now))
         # plan at admission: hot classes are a plan-cache hit; the
         # signature + cost forecast route and size the lane
-        ticket = self.service.plan_request(query, start_nodes, strategy)
+        ticket = self.service.plan_request(query, start_nodes, strategy, semantics)
         pending = _Pending(
             ticket=ticket,
             tenant=tenant,

@@ -94,16 +94,20 @@ def group_by_signature(
 
 def run_s2_group(
     group: Sequence[Any],
-    execute: Callable[[np.ndarray, Any], tuple[np.ndarray, list]],
+    execute: Callable[[np.ndarray, Any], tuple],
     max_batch: int = 128,
     multiple: int = 1,
-) -> dict[int, tuple[np.ndarray, list, int]]:
+) -> dict[int, tuple[np.ndarray, list, int, np.ndarray | None]]:
     """Run one signature group's concatenated starts through ``execute``.
 
-    ``execute(starts, exemplar_item) -> (answers, costs)`` is called once
-    per bucketed chunk; every item in the group shares an automaton, so
-    the exemplar's compiled executor serves all of them.  Returns
-    ``{id(item): (answer_rows, cost_rows, padded_batch)}``.
+    ``execute(starts, exemplar_item) -> (answers, costs)`` — or
+    ``(answers, costs, levels)`` under witness semantics, where
+    ``levels`` is the per-start (n_states, n_nodes) discovery-level
+    plane (see :mod:`repro.core.witness`) — is called once per bucketed
+    chunk; every item in the group shares an automaton, so the
+    exemplar's compiled executor serves all of them.  Returns
+    ``{id(item): (answer_rows, cost_rows, padded_batch, level_rows)}``
+    with ``level_rows`` ``None`` for pairs-mode groups.
     """
     slices: list[S2Slice] = []
     all_starts: list[np.ndarray] = []
@@ -117,6 +121,7 @@ def run_s2_group(
 
     acc_chunks: list[np.ndarray] = []
     cost_chunks: list[list] = []
+    lev_chunks: list[np.ndarray] = []
     pad_sizes: list[int] = []
     # chunk by the largest admissible bucket so bucket_size never truncates
     chunk_cap = bucket_size(max_batch, multiple, max_batch)
@@ -124,23 +129,32 @@ def run_s2_group(
         chunk = starts[lo : lo + chunk_cap]
         size = bucket_size(len(chunk), multiple, max_batch)
         padded = pad_starts(chunk, size)
-        acc, costs = execute(padded, group[0])
+        res = execute(padded, group[0])
+        acc, costs = res[0], res[1]
         acc_chunks.append(np.asarray(acc)[: len(chunk)])
         cost_chunks.append(costs[: len(chunk)])
+        if len(res) > 2 and res[2] is not None:
+            lev_chunks.append(np.asarray(res[2])[: len(chunk)])
         pad_sizes.append(size)
 
     acc_all = np.concatenate(acc_chunks) if acc_chunks else np.zeros((0, 0), bool)
     costs_all = [c for chunk in cost_chunks for c in chunk]
+    lev_all = np.concatenate(lev_chunks) if lev_chunks else None
     batch_of = np.zeros(len(starts), np.int32)
     pos = 0
     for size, chunk in zip(pad_sizes, acc_chunks):
         batch_of[pos : pos + len(chunk)] = size
         pos += len(chunk)
 
-    out: dict[int, tuple[np.ndarray, list, int]] = {}
+    out: dict[int, tuple[np.ndarray, list, int, np.ndarray | None]] = {}
     for sl in slices:
         batch = int(batch_of[sl.lo]) if sl.hi > sl.lo else 0
-        out[id(sl.item)] = (acc_all[sl.lo : sl.hi], costs_all[sl.lo : sl.hi], batch)
+        out[id(sl.item)] = (
+            acc_all[sl.lo : sl.hi],
+            costs_all[sl.lo : sl.hi],
+            batch,
+            lev_all[sl.lo : sl.hi] if lev_all is not None else None,
+        )
     return out
 
 

@@ -39,6 +39,7 @@ class QueryRecord:
     unicast_symbols: float
     plan_cache_hit: bool
     exec_batch_size: int  # padded batch the request rode in (S2), or 1
+    semantics: str = "pairs"  # "pairs" | "witness" (answers_with_witness)
 
 
 # the async runtime's SLO classes (see repro.serve.aio): latency-

@@ -186,6 +186,14 @@ class PlanEntry:
     fkey: tuple = ()  # feedback.label_class_key(ast)
     label_mask: Any = None  # (n_labels,) bool
     sig: tuple = ()  # automaton_signature for the service's mesh/config
+    # query-class fast path (planner.classify_query): the automaton the
+    # executors actually run — reduced to 1 state for pure closures —
+    # and its level cap; plus the witness-semantics signature, so pairs
+    # and witness requests of one query class resolve distinct executors
+    exec_ca: CompiledAutomaton | None = None
+    exec_max_levels: int | None = None
+    query_class: Any = None  # planner.QueryClass
+    sig_witness: tuple = ()
 
 
 class PlanCache:
@@ -222,15 +230,20 @@ def automaton_signature(
     max_levels: int | None = None,
     backend: str = "reference",
     block_size: int = 128,
+    semantics: str = "pairs",
 ) -> tuple:
     """Structural identity of a compiled S2 executor.
 
     Everything :func:`~repro.core.strategies.make_s2_step_fn` closes over:
     the fused transition runs, start/accepting states, node count, the
-    mesh/axis configuration, and the backend (+ its tile block size for
-    the fused frontier-kernel backend).  Two queries with equal
-    signatures produce byte-identical step functions and therefore share
-    one jit cache.
+    mesh/axis configuration, the backend (+ its tile block size for
+    the fused frontier-kernel backend), and the answer semantics
+    (``"pairs"`` vs ``"witness"`` executors trace different carries).
+    Two queries with equal signatures produce byte-identical step
+    functions and therefore share one jit cache.
+
+    New fields append at the END: consumers index positionally
+    (``frontier_mem_stats`` reads sig[0]/sig[4]/sig[9]/sig[10]).
     """
     mesh_key = tuple((n, int(mesh.shape[n])) for n in mesh.axis_names)
     return (
@@ -245,6 +258,7 @@ def automaton_signature(
         max_levels,
         backend,
         block_size,
+        semantics,
     )
 
 
@@ -339,6 +353,7 @@ class ExecutorCache:
         placement: Any = None,
         stats_epoch: int = 0,
         bucket_floor: int | None = None,
+        semantics: str = "pairs",
     ) -> tuple[tuple, Callable]:
         """``signature`` accepts the precomputed key (the service computes
         it once per request during planning) to skip re-deriving the
@@ -351,7 +366,8 @@ class ExecutorCache:
             signature
             if signature is not None
             else automaton_signature(
-                ca, n_nodes, mesh, site_axes, batch_axis, max_levels, backend, block_size
+                ca, n_nodes, mesh, site_axes, batch_axis, max_levels, backend,
+                block_size, semantics,
             )
         )
         bucket_id = None
@@ -383,7 +399,7 @@ class ExecutorCache:
             backend=backend, graph=graph, replication_factor=replication_factor,
             block_size=block_size, interpret=interpret, placement=placement,
             plan_store=self.plan_store, stats_epoch=stats_epoch,
-            bucket_floor=bucket_floor,
+            bucket_floor=bucket_floor, semantics=semantics,
         )
         self._lru[key] = _ExecEntry(
             graph_key=gkey, sig=sig, fn=fn,

@@ -33,7 +33,7 @@ import numpy as np
 
 from jax.sharding import Mesh
 
-from repro.core import paa, planner, plans, strategies
+from repro.core import paa, planner, plans, strategies, witness
 from repro.core import regex as rx
 from repro.core.cost_model import NetworkParams
 from repro.core.strategies import StrategyCost
@@ -64,6 +64,11 @@ class ServeConfig:
     site_axes: tuple[str, ...] = ("data",)
     batch_axis: str | None = "model"
     max_levels: int | None = None
+    # default answer semantics: "pairs" (the paper's node-pair answers)
+    # or "witness" (answers + per-start discovery-level planes so
+    # QueryService.witness_path can reconstruct an accepting run — see
+    # repro.core.witness); per-request override on submit/enqueue
+    semantics: str = "pairs"
     # S2 executor backend: "reference" (shard_map gather/scatter),
     # "frontier_kernel" (fused Pallas level on the global tiles, 8
     # queries per row tile), "frontier_kernel_packed" (same staged
@@ -97,6 +102,13 @@ class Answers:
     observed: list[StrategyCost]  # per start (S2) or one per request (S1)
     latency_s: float
     plan_cache_hit: bool
+    semantics: str = "pairs"
+    # witness semantics only: per-start (n_states, n_nodes) discovery
+    # levels over the *executed* automaton (exec_ca — the planner's
+    # reduced form for closure queries), the state
+    # QueryService.witness_path reconstructs runs from
+    levels: np.ndarray | None = None
+    exec_ca: paa.CompiledAutomaton | None = None
 
 
 class Ticket:
@@ -137,6 +149,7 @@ class _Request:
     ticket: Ticket
     t_enqueue: float
     strategy_override: str | None = None
+    semantics: str = "pairs"
     # filled by the plan phase
     entry: plancache.PlanEntry | None = None
     plan: planner.QueryPlan | None = None
@@ -149,6 +162,18 @@ class _Request:
     @property
     def ca(self):
         return self.entry.ca
+
+    @property
+    def exec_ca(self):
+        """The automaton the executors actually run — the planner's
+        reduced form when the query class admits one (closure queries
+        collapse to a 1-state automaton), the compiled original
+        otherwise."""
+        return self.entry.exec_ca if self.entry.exec_ca is not None else self.entry.ca
+
+    @property
+    def exec_max_levels(self):
+        return self.entry.exec_max_levels
 
 
 class QueryService:
@@ -191,6 +216,7 @@ class QueryService:
         )
         self.calibrator = feedback.Calibrator(decay=self.config.calibration_decay)
         self.metrics = metrics_mod.ServiceMetrics()
+        self._host_index: paa.HostIndex | None = None  # lazy, for witness_path
         self._queue: list[_Request] = []
         # flush serialization: one drain owns the admission queue at a
         # time (see flush()); enqueues stay lock-free — list.append and
@@ -224,10 +250,15 @@ class QueryService:
     # -- admission ----------------------------------------------------------
 
     def _validated_request(
-        self, query: str, start_nodes, strategy: str | None
+        self, query: str, start_nodes, strategy: str | None,
+        semantics: str | None = None,
     ) -> _Request:
         if strategy not in (None, "S1", "S2"):
             raise ValueError(f"strategy must be None, 'S1', or 'S2', got {strategy!r}")
+        if semantics not in (None, "pairs", "witness"):
+            raise ValueError(
+                f"semantics must be None, 'pairs', or 'witness', got {semantics!r}"
+            )
         ast = rx.parse(query)  # reject malformed queries at admission
         starts = np.atleast_1d(np.asarray(start_nodes, np.int32))
         n_nodes = self.placement.graph.n_nodes
@@ -243,6 +274,7 @@ class QueryService:
             ticket=Ticket(query, starts),
             t_enqueue=time.perf_counter(),
             strategy_override=strategy,
+            semantics=semantics or self.config.semantics,
         )
 
     def enqueue(
@@ -250,12 +282,13 @@ class QueryService:
         query: str,
         start_nodes,
         strategy: str | None = None,
+        semantics: str | None = None,
     ) -> Ticket:
         if len(self._queue) >= self.config.max_pending:
             raise ServiceOverloaded(
                 f"admission queue full ({self.config.max_pending} pending)"
             )
-        req = self._validated_request(query, start_nodes, strategy)
+        req = self._validated_request(query, start_nodes, strategy, semantics)
         self._queue.append(req)
         return req.ticket
 
@@ -264,6 +297,7 @@ class QueryService:
         query: str,
         start_nodes,
         strategy: str | None = None,
+        semantics: str | None = None,
     ) -> Ticket:
         """Validate and *plan* a request without queueing it.
 
@@ -276,7 +310,7 @@ class QueryService:
         planning a request and then dropping it costs only the plan-
         cache lookup (a §5 rollout estimation on the first miss of its
         query class)."""
-        req = self._validated_request(query, start_nodes, strategy)
+        req = self._validated_request(query, start_nodes, strategy, semantics)
         self._plan(req)
         req.ticket._request = req
         return req.ticket
@@ -296,12 +330,20 @@ class QueryService:
         self._queue.append(req)
         return ticket
 
-    def submit(self, query: str, start_nodes, strategy: str | None = None) -> Answers:
+    def submit(
+        self,
+        query: str,
+        start_nodes,
+        strategy: str | None = None,
+        semantics: str | None = None,
+    ) -> Answers:
         """Admit one query and drain the queue; returns its answers.
 
         Anything else already enqueued is flushed (and batched) with it.
+        ``semantics="witness"`` makes the resolved :class:`Answers`
+        carry discovery-level planes for :meth:`witness_path`.
         """
-        ticket = self.enqueue(query, start_nodes, strategy)
+        ticket = self.enqueue(query, start_nodes, strategy, semantics)
         self.flush()
         return ticket.result()
 
@@ -326,21 +368,45 @@ class QueryService:
                 seed=cfg.seed,
             )
             ca = paa.compile_query(req.query, self.placement.graph)
+            # query-class fast paths: closure queries run a reduced
+            # 1-state automaton (no automaton product), single-label /
+            # bounded-concatenation queries cap the fixpoint's level
+            # budget — both fold into the signature, so fast-path and
+            # general executors never collide in the executor cache
+            qc = est.query_class or planner.classify_query(req.ast)
+            exec_ca = planner.reduce_automaton(ca, qc)
+            fp_levels = planner.fast_path_max_levels(qc)
+            if fp_levels is None:
+                exec_levels = cfg.max_levels
+            elif cfg.max_levels is None:
+                exec_levels = fp_levels
+            else:
+                exec_levels = min(fp_levels, cfg.max_levels)
+            sig_args = (
+                exec_ca, self.placement.graph.n_nodes, self.mesh,
+                cfg.site_axes, cfg.batch_axis, exec_levels,
+                cfg.s2_backend, cfg.s2_block_size,
+            )
             entry = plancache.PlanEntry(
                 key=key, ast=req.ast, ca=ca, estimates=est,
                 fkey=feedback.label_class_key(req.ast),
                 label_mask=strategies.query_label_mask(req.ast, self.placement.graph),
-                sig=plancache.automaton_signature(
-                    ca, self.placement.graph.n_nodes, self.mesh,
-                    cfg.site_axes, cfg.batch_axis, cfg.max_levels,
-                    cfg.s2_backend, cfg.s2_block_size,
+                sig=plancache.automaton_signature(*sig_args, semantics="pairs"),
+                exec_ca=exec_ca,
+                exec_max_levels=exec_levels,
+                query_class=qc,
+                sig_witness=plancache.automaton_signature(
+                    *sig_args, semantics="witness"
                 ),
             )
             self.plan_cache.put(key, self.stats_epoch, entry)
         req.entry = entry
         req.fkey = entry.fkey
         req.label_mask = entry.label_mask
-        req.sig = entry.sig
+        # pairs and witness requests resolve distinct signatures (the
+        # witness executor's carry is one f32 plane wider), so they batch
+        # into separate lanes and executor-cache slots
+        req.sig = entry.sig_witness if req.semantics == "witness" else entry.sig
         f = self.calibrator.factors(req.fkey)
         plan = planner.decide_strategy(
             entry.estimates,
@@ -385,22 +451,30 @@ class QueryService:
 
         for group in batcher.group_by_signature(reqs, lambda r: r.sig):
             try:
+                # the group's signature encodes the *executed* automaton
+                # (the planner's reduced form on closure queries), the
+                # fast-path level cap, and the answer semantics — build
+                # the executor from exactly those
+                g_sem = group[0].semantics
+                g_levels = group[0].exec_max_levels
                 _, step_fn = self.exec_cache.get_or_build(
-                    group[0].ca, self.placement.graph.n_nodes, self.mesh,
-                    cfg.site_axes, cfg.batch_axis, cfg.max_levels,
+                    group[0].exec_ca, self.placement.graph.n_nodes, self.mesh,
+                    cfg.site_axes, cfg.batch_axis, g_levels,
                     signature=group[0].sig,
                     backend=cfg.s2_backend, graph=self.placement.graph,
                     replication_factor=self.placement.replication_factor,
                     block_size=cfg.s2_block_size, placement=self.placement,
                     stats_epoch=self.stats_epoch,
                     bucket_floor=cfg.s2_bucket_floor,
+                    semantics=g_sem,
                 )
 
                 def execute(starts, exemplar):
                     return strategies.s2_execute(
-                        self.mesh, self.placement, exemplar.ca, starts,
-                        cfg.site_axes, cfg.batch_axis, cfg.max_levels,
+                        self.mesh, self.placement, exemplar.exec_ca, starts,
+                        cfg.site_axes, cfg.batch_axis, g_levels,
                         step_fn=step_fn, device_arrays=self._device_arrays,
+                        semantics=g_sem,
                     )
 
                 results = batcher.run_s2_group(
@@ -411,11 +485,11 @@ class QueryService:
                     self._fail(req, e)
                 continue
             for req in group:
-                rows, costs, batch = results[id(req)]
+                rows, costs, batch, levels = results[id(req)]
                 answers = [set(np.nonzero(rows[i])[0].tolist()) for i in range(len(req.starts))]
                 for c in costs:
                     self.calibrator.observe(req.fkey, req.entry.estimates, req.plan, c)
-                self._finish(req, answers, costs, exec_batch=batch)
+                self._finish(req, answers, costs, exec_batch=batch, levels=levels)
 
     def _run_s1(self, reqs: list[_Request]) -> None:
         cfg = self.config
@@ -440,12 +514,28 @@ class QueryService:
                         set(np.nonzero(np.asarray(paa.answers_single_source(req.ca, dg, int(s))))[0].tolist())
                         for s in req.starts
                     ]
+                    levels = None
+                    if req.semantics == "witness":
+                        # S1 answers locally: the collected subgraph holds
+                        # every edge the query can traverse, so its BFS
+                        # levels are valid against the global label store
+                        # (subgraph edges ⊆ global edges)
+                        idx = paa.HostIndex(own)
+                        levels = np.stack([
+                            witness.host_levels(
+                                req.exec_ca, idx, int(s),
+                                max_levels=req.exec_max_levels,
+                            )
+                            for s in req.starts
+                        ]) if len(req.starts) else np.zeros(
+                            (0, req.exec_ca.n_states, graph.n_nodes), np.float32
+                        )
                 except Exception as e:  # noqa: BLE001
                     self._fail(req, e)
                     continue
                 cost = strategies.s1_costs(req.entry.ast, graph)
                 self.calibrator.observe(req.fkey, req.entry.estimates, req.plan, cost)
-                self._finish(req, answers, [cost], exec_batch=len(group))
+                self._finish(req, answers, [cost], exec_batch=len(group), levels=levels)
 
     def _fail(self, req: _Request, err: Exception) -> None:
         req.ticket.error = err
@@ -457,6 +547,7 @@ class QueryService:
         answers: list[set[int]],
         observed: list[StrategyCost],
         exec_batch: int,
+        levels: np.ndarray | None = None,
     ) -> None:
         latency = time.perf_counter() - req.t_enqueue
         req.ticket._answers = Answers(
@@ -468,6 +559,9 @@ class QueryService:
             observed=observed,
             latency_s=latency,
             plan_cache_hit=req.plan_cache_hit,
+            semantics=req.semantics,
+            levels=levels,
+            exec_ca=req.exec_ca if levels is not None else None,
         )
         req.ticket.done = True
         self.metrics.record(
@@ -480,7 +574,30 @@ class QueryService:
                 unicast_symbols=float(sum(c.unicast_symbols for c in observed)),
                 plan_cache_hit=req.plan_cache_hit,
                 exec_batch_size=exec_batch,
+                semantics=req.semantics,
             )
+        )
+
+    def witness_path(
+        self, answers: Answers, start_index: int, target: int
+    ) -> witness.WitnessPath:
+        """Reconstruct one accepting run for ``target`` from a
+        witness-mode :class:`Answers` (``answers.starts[start_index]``
+        is the run's source).  The walk runs against the placement's
+        global label store; see :func:`repro.core.witness.reconstruct_path`
+        for the level-walk contract and error cases."""
+        if answers.levels is None or answers.exec_ca is None:
+            raise ValueError(
+                "answers carry no witness levels — submit with semantics='witness'"
+            )
+        if self._host_index is None:
+            self._host_index = paa.HostIndex(self.placement.graph)
+        return witness.reconstruct_path(
+            answers.exec_ca,
+            self._host_index,
+            answers.levels[start_index],
+            int(answers.starts[start_index]),
+            int(target),
         )
 
     # -- the drain loop ------------------------------------------------------

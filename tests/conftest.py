@@ -3,15 +3,24 @@ dry-run forces 512 devices in its own process, never here), and fail any
 single test that runs longer than REPRO_TEST_TIMEOUT seconds.
 
 The timeout is SIGALRM-based (pytest-timeout is not in the image —
-re-checked PR 8, 2026-08, still absent, so the hook stays): the
+re-checked PR 9, 2026-08, still absent, so the hook stays): the
 alarm raises in the main thread at the next bytecode boundary, which
 catches the retracing/driver-level hangs this repo has actually had.  A
 test stuck inside one long-running C call is covered by the coarser
 ``faulthandler_timeout`` in pyproject.toml.
+
+``signal.signal`` / ``setitimer`` raise ``ValueError`` off the main
+thread (e.g. items run under a threaded plugin or an asyncio worker
+hand-off), so the hook only arms the alarm on the main thread and falls
+back to ``faulthandler.dump_traceback_later`` elsewhere — the test then
+can't be *failed* at the deadline, but a hang still dumps every stack
+instead of wedging the run silently.
 """
 
+import faulthandler
 import os
 import signal
+import threading
 
 import pytest
 
@@ -34,6 +43,16 @@ def pytest_runtest_call(item):
     timeout_s = int(marker.args[0]) if marker else TEST_TIMEOUT_S
     if timeout_s <= 0 or not hasattr(signal, "SIGALRM"):
         yield
+        return
+
+    if threading.current_thread() is not threading.main_thread():
+        # SIGALRM can only be armed from the main thread; fall back to a
+        # stack dump at the deadline so a hang is at least diagnosable
+        faulthandler.dump_traceback_later(timeout_s, exit=False)
+        try:
+            yield
+        finally:
+            faulthandler.cancel_dump_traceback_later()
         return
 
     def _on_timeout(signum, frame):

@@ -230,6 +230,9 @@ def test_chunked_staging_is_byte_identical():
         assert base1 == base2 and (r1 == r2).all() and (c1 == c2).all(), key
 
 
+@pytest.mark.slow
+@pytest.mark.subprocess
+@pytest.mark.multidevice
 def test_packed_backend_on_8_devices():
     """Acceptance criterion: on ≥2 real (forced-host) devices the packed
     backend answers 256 stacked queries bit-exactly vs the host PAA

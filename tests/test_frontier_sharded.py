@@ -197,6 +197,9 @@ def test_sharded_requires_placement_and_divisible_sites(setup):
         )
 
 
+@pytest.mark.slow
+@pytest.mark.subprocess
+@pytest.mark.multidevice
 def test_sharded_backend_on_8_devices():
     """Acceptance criterion: on ≥2 real (forced-host) devices the sharded
     backend still matches the reference BFS and the global fused backend

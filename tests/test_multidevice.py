@@ -23,7 +23,12 @@ SUBPROCESS_TIMEOUT_S = 600
 
 # the subprocess timeout must fire before the conftest SIGALRM so the
 # child's stdout/stderr reach the failure message
-pytestmark = pytest.mark.timeout_s(SUBPROCESS_TIMEOUT_S + 60)
+pytestmark = [
+    pytest.mark.timeout_s(SUBPROCESS_TIMEOUT_S + 60),
+    pytest.mark.slow,
+    pytest.mark.subprocess,
+    pytest.mark.multidevice,
+]
 
 
 def test_executors_on_8_devices():

@@ -319,6 +319,9 @@ def test_plan_store_lru_bound(setup):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
+@pytest.mark.subprocess
+@pytest.mark.multidevice
 def test_plan_store_on_8_devices():
     """Acceptance criterion: store-routed builds stay bit-exact vs the
     reference backend and the host PAA on 8 real (forced-host) devices,

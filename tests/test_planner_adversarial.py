@@ -1,0 +1,189 @@
+"""Adversarial planner tests: query streams built to straddle the §6
+S1/S2 discriminant and the PR-9 query-class boundaries, with oracle
+answers checked through :class:`QueryService` under every forced-strategy
+override — whatever the planner decides, both execution paths (and the
+fast-path executors the classifier routes to) must agree with the
+centralized PAA.
+
+Also locks down :func:`repro.core.planner.classify_query`: the decision
+``(kind, length)`` is label-name-free, so α-renaming a query never moves
+it across a fast-path boundary.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import paa, planner
+from repro.core import regex as rx
+from repro.core.cost_model import NetworkParams
+from repro.dist import compat
+from repro.graph import workloads
+from repro.graph.generators import random_labeled_graph
+from repro.graph.partition import distribute
+from repro.serve import QueryService, ServeConfig
+
+NET = NetworkParams(n_peers=150, n_connections=450, replication_rate=0.2)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = random_labeled_graph(24, 90, 3, seed=42)
+    placement = distribute(g, n_sites=3, replication_rate=0.3, seed=2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    return g, placement, mesh
+
+
+# ---------------------------------------------------------------------------
+# classify_query: boundaries and α-renaming stability
+# ---------------------------------------------------------------------------
+
+CLASS_CASES = [
+    # single-label atoms (length-1 level cap)
+    ("a", "single_label", 1),
+    ("a^-1", "single_label", 1),
+    (".", "single_label", 1),
+    ("(a|b)", "single_label", 1),
+    # pure transitive closure of an atom (1-state reduction)
+    ("a*", "closure", 0),
+    ("(a|b)*", "closure", 0),
+    ("(a^-1)*", "closure", 0),
+    ("(.)*", "closure", 0),
+    # concatenation-only bounded length (level cap = length)
+    ("a b", "bounded", 2),
+    ("a . b", "bounded", 3),
+    ("a (b|c) a^-1", "bounded", 3),
+    # everything that must NOT take a fast path
+    ("a+", "general", 0),
+    ("a* b", "general", 0),
+    ("(a b)*", "general", 0),
+    ("(a*)*", "general", 0),
+    ("a|b*", "general", 0),
+]
+
+
+@pytest.mark.parametrize("expr,kind,length", CLASS_CASES)
+def test_classify_query_boundaries(expr, kind, length):
+    qc = planner.classify_query(expr)
+    assert qc.kind == kind, (expr, qc)
+    if kind in ("single_label", "bounded"):
+        assert qc.length == length, (expr, qc)
+
+
+RENAMINGS = [
+    ("(a|b)*", "(b|a)*"),
+    ("(a|b)*", "(x|y)*"),
+    ("a b c", "c b a"),
+    ("a b c", "x y z"),
+    ("a* b", "q* r"),
+    ("(a|b) c", "(p|q) r"),
+]
+
+
+@pytest.mark.parametrize("expr,renamed", RENAMINGS)
+def test_classify_query_stable_under_alpha_renaming(expr, renamed):
+    qa, qb = planner.classify_query(expr), planner.classify_query(renamed)
+    assert (qa.kind, qa.length) == (qb.kind, qb.length), (expr, renamed, qa, qb)
+
+
+def test_reduce_automaton_only_touches_closure(setup):
+    g, _, _ = setup
+    for expr, kind, _ in CLASS_CASES:
+        expr = expr.replace("x", "a")
+        ca = paa.compile_query(expr, g)
+        red = planner.reduce_automaton(ca, planner.classify_query(expr))
+        if kind == "closure":
+            assert red.n_states == 1
+            assert red.accepting == (0,)
+        else:
+            assert red is ca
+
+
+def test_estimates_carry_query_class(setup):
+    g, _, _ = setup
+    est = planner.estimate_query("a*", g, n_rollouts=30, seed=0)
+    assert est.query_class is not None and est.query_class.kind == "closure"
+    plan = planner.decide_strategy(est, NET)
+    assert plan.query_class is not None and plan.query_class.kind == "closure"
+
+
+# ---------------------------------------------------------------------------
+# discriminant-straddling streams through the service, all strategy overrides
+# ---------------------------------------------------------------------------
+
+# hand-picked straddlers: tiny label footprint (S1-flavored retrieval)
+# through unbounded wildcard closures (S2's reason to exist), spanning
+# every query class the planner special-cases
+STRADDLERS = [
+    "a",            # single_label: 1-level cap
+    "(a|b)",        # single_label with a 2-label mask
+    "a*",           # closure: 1-state reduction
+    "(a|c)*",       # closure over a union atom
+    "a b",          # bounded: 2-level cap
+    "a . c",        # bounded with a wildcard hop (defeats S1 selection)
+    "a+ b",         # general: closure-adjacent but NOT reducible
+    "(a b)*",       # general: closure of a non-atom
+    ". .",          # bounded all-wildcard: maximal S1 gather
+]
+
+
+def _oracle(g, expr, starts):
+    dg = paa.device_form(g)
+    ca = paa.compile_query(expr, g)
+    return [
+        set(np.nonzero(np.asarray(paa.answers_single_source(ca, dg, int(s))))[0].tolist())
+        for s in starts
+    ]
+
+
+@pytest.mark.parametrize("strategy", [None, "S1", "S2"])
+def test_straddler_stream_matches_oracle_under_forced_strategies(setup, strategy):
+    g, placement, mesh = setup
+    svc = QueryService(placement, mesh, NET, config=ServeConfig(n_rollouts=40, seed=0))
+    rng = np.random.default_rng(7)
+    for expr in STRADDLERS:
+        starts = rng.integers(0, g.n_nodes, 5).astype(np.int32)
+        ans = svc.submit(expr, starts, strategy=strategy)
+        assert ans.answers == _oracle(g, expr, starts), (expr, strategy)
+        if strategy is not None:
+            assert ans.strategy == strategy
+
+
+def test_workload_stream_matches_oracle_across_strategies(setup):
+    """Seed-path-instantiated workload queries (answerable by
+    construction, closure/union/wildcard generalizations straddle the
+    discriminant) answer identically under S1, S2, and planner choice."""
+    g, placement, mesh = setup
+    svc = QueryService(placement, mesh, NET, config=ServeConfig(n_rollouts=40, seed=0))
+    stream = workloads.generate(
+        g,
+        workloads.WorkloadConfig(
+            n_queries=8, min_len=1, max_len=3, wildcard_prob=0.2,
+            union_prob=0.3, closure_prob=0.4, hot_fraction=0.5,
+            min_starts=1, max_starts=4, seed=5,
+        ),
+    )
+    for wq in stream:
+        expected = _oracle(g, wq.query, wq.starts)
+        got = {
+            s: svc.submit(wq.query, wq.starts, strategy=s).answers
+            for s in (None, "S1", "S2")
+        }
+        for s, ans in got.items():
+            assert ans == expected, (wq.query, s)
+        # the seed-path source witnesses the query by construction
+        assert len(expected[0]) > 0, wq.query
+
+
+def test_fast_path_answers_match_general_paa(setup):
+    """The classifier's fast paths (reduced automaton / level cap) are
+    answer-invisible: witness-mode submissions through the service (which
+    execute the reduced form) match the general-PAA oracle exactly."""
+    g, placement, mesh = setup
+    svc = QueryService(placement, mesh, NET, config=ServeConfig(n_rollouts=40, seed=0))
+    starts = np.arange(0, g.n_nodes, 5, dtype=np.int32)
+    for expr in ["a", "(a|b)", "a*", "(a|c)*", "a b", "a . c"]:
+        ans = svc.submit(expr, starts, strategy="S2", semantics="witness")
+        assert ans.answers == _oracle(g, expr, starts), expr
+        qc = planner.classify_query(expr)
+        if qc.kind == "closure":
+            assert ans.exec_ca.n_states == 1, expr
