@@ -20,6 +20,14 @@ Stage-A staging sweep on a ≥100k-edge graph.
   (``chunk_edges``) on a ≥100k-edge generator graph: tracemalloc peak
   *transient* host bytes (peak minus the retained staged tiles), plus a
   byte-identity check of the staged artifacts.
+* **tile-store dtype sweep** — f32 vs bitpacked uint32 Stage-A staging
+  at the 100k- and 400k-edge points: staged tile-store bytes per dtype
+  (the acceptance target is ≥8×, measured 32× at block 128), the fused
+  boolean fixpoint latency on each store (``fixpoint_ms_tiles_*`` rows,
+  regression-gated), and an out-of-core run that replays a label stream
+  through a :class:`~repro.core.plans.GraphPlanStore` under a byte
+  budget a third of the full store (``--budget-bytes`` overrides),
+  recording the spill/reload counts and the resident ceiling.
 """
 
 from __future__ import annotations
@@ -82,11 +90,16 @@ def run_packed(
     out: str = PACKED_JSON,
     seed: int = 0,
     interpret: bool = True,
+    budget_bytes: int | None = None,
 ) -> list[str]:
     import numpy as np
 
+    import jax.numpy as jnp
+
     from benchmarks.common import bench_env
     from repro.core import paa
+    from repro.core.automaton import FWD, INV
+    from repro.core.plans import GraphPlanStore
     from repro.graph.generators import random_labeled_graph
     from repro.kernels.frontier import ops as fops
 
@@ -234,6 +247,79 @@ def run_packed(
         "staging_transient_ratio", "pack_label_edges",
         "pack_scratch_bytes_oneshot", "pack_scratch_bytes_chunked",
         "pack_scratch_ratio",
+    ):
+        rows.append(f"packed,{k},{result[k]:.4f}")
+
+    # ---- tile-store dtype sweep: f32 vs bitpacked uint32 -----------------
+    # staged bytes + fused boolean fixpoint latency on each store, at the
+    # 100k- and (by default) 400k-edge points
+    for sweep_edges in (100_000, big_edges):
+        gl = random_labeled_graph(big_nodes, sweep_edges, n_labels, seed=seed + 2)
+        ca_l = paa.compile_query(PACKED_QUERY, gl)
+        tag = f"e{sweep_edges // 1000}k"
+        staged = {
+            dt: fops.stage_graph(gl, 128, tile_dtype=dt)
+            for dt in ("f32", "uint32")
+        }
+        for dt, s in staged.items():
+            result[f"staged_tile_bytes_{dt}_{tag}"] = int(s.tile_store_bytes)
+        result[f"staged_bytes_ratio_{tag}"] = (
+            staged["f32"].tile_store_bytes / staged["uint32"].tile_store_bytes
+        )
+
+        masks = np.zeros((fops.QPAD, big_nodes), np.float32)
+        masks[np.arange(fops.QPAD), rng.choice(big_nodes, size=fops.QPAD)] = 1.0
+        visited = {}
+        for dt, s in staged.items():
+            plan_dt = fops.build_level_schedule(ca_l, s)
+            f0 = jnp.asarray(fops.stack_start_masks(plan_dt, ca_l.start, masks))
+
+            def fx(plan_dt=plan_dt, f0=f0):
+                return np.asarray(
+                    fops.reach_fixpoint(plan_dt, f0, interpret=interpret)
+                )
+
+            visited[dt] = fx() > 0  # warm the trace; keep for the identity check
+            result[f"fixpoint_ms_tiles_{dt}_{tag}"] = 1e3 * _best(fx, repeats)
+        if not (visited["f32"] == visited["uint32"]).all():
+            raise AssertionError(f"uint32 store != f32 answers at {tag}")
+        for k in (
+            f"staged_tile_bytes_f32_{tag}", f"staged_tile_bytes_uint32_{tag}",
+            f"staged_bytes_ratio_{tag}",
+            f"fixpoint_ms_tiles_f32_{tag}", f"fixpoint_ms_tiles_uint32_{tag}",
+        ):
+            rows.append(f"packed,{k},{result[k]:.4f}")
+
+    # ---- out-of-core: label stream under a tight slab-cache budget -------
+    # replay every (direction, label) slab twice through a budgeted
+    # GraphPlanStore — the second pass re-touches evicted slabs, so both
+    # the spill and the reload paths are on the measured clock
+    full_u32 = staged["uint32"]  # the 400k-point store from the sweep above
+    tight = budget_bytes if budget_bytes is not None else full_u32.tile_store_bytes // 3
+    store = GraphPlanStore()  # fresh: tile_store_stats sees only the slab cache
+    fops.reset_build_counters()
+    t0 = time.perf_counter()
+    for lid in list(range(n_labels)) * 2:
+        store.staged_graph(
+            gl, 128, tile_dtype="uint32", budget_bytes=tight,
+            keys=((FWD, lid), (INV, lid)),
+        )
+    stream_s = time.perf_counter() - t0
+    ts = store.tile_store_stats()
+    result.update(
+        {
+            "tile_budget_bytes": int(tight),
+            "tile_budget_full_bytes": int(full_u32.tile_store_bytes),
+            "tile_budget_spills": int(fops.BUILD_COUNTERS["spills"]),
+            "tile_budget_reloads": int(fops.BUILD_COUNTERS["reloads"]),
+            "tile_budget_resident_bytes": int(ts["bytes_by_dtype"]["uint32"]),
+            "tile_budget_stream_ms": 1e3 * stream_s,
+        }
+    )
+    for k in (
+        "tile_budget_bytes", "tile_budget_full_bytes", "tile_budget_spills",
+        "tile_budget_reloads", "tile_budget_resident_bytes",
+        "tile_budget_stream_ms",
     ):
         rows.append(f"packed,{k},{result[k]:.4f}")
 

@@ -38,7 +38,9 @@ KNOWN = [
 #                  the `overload` block (2x offered load sheds by
 #                  design; its tail is rejection-shaped, not a signal)
 #   packed       — every fixpoint_ms* leaf of BENCH_frontier_packed.json
-#                  (f32 and packed multi-query fixpoints at Q=8/64/256)
+#                  (f32 and packed multi-query fixpoints at Q=8/64/256,
+#                  plus the fixpoint_ms_tiles_* rows of the f32-vs-uint32
+#                  tile-store sweep)
 #   witness      — every fixpoint_ms* leaf of BENCH_witness.json (the
 #                  witness level-carry overhead and the closure fast path)
 REGRESS_FACTOR = 1.3
@@ -109,6 +111,14 @@ def main() -> None:
         ),
     )
     ap.add_argument(
+        "--budget-bytes", type=int, default=None,
+        help=(
+            "tile-store byte budget for the `packed` subset's out-of-core "
+            "run (default: a third of the full uint32 store at the "
+            "400k-edge point)"
+        ),
+    )
+    ap.add_argument(
         "--platform",
         help=(
             "free-form provenance note recorded in every BENCH_*.json env "
@@ -176,7 +186,9 @@ def main() -> None:
         ("frontier", frontier_level),
         ("dist", frontier_sharded),
         ("plans", plan_store),
-        ("packed", types.SimpleNamespace(run=roofline.run_packed)),
+        ("packed", types.SimpleNamespace(
+            run=lambda: roofline.run_packed(budget_bytes=args.budget_bytes)
+        )),
         ("witness", witness),
     ]
 

@@ -16,7 +16,10 @@ bound.
 
 Also measures the Stage-A warm-restart path: the plan store is
 snapshotted after the sync pass, restored into a fresh service, and the
-executor rebuilds are asserted to pack zero tiles (``BUILD_COUNTERS``).
+executor rebuilds are asserted to pack zero tiles (``BUILD_COUNTERS``) —
+and the stream-level goodput with the bitpacked uint32 tile store
+enabled (``uint32_stream``: all-S2 open loop on the packed backend, f32
+store as the control, staged tile-store bytes per config recorded).
 
 Writes ``BENCH_serve_async.json``.  The ``2x`` sweep point lands under
 the ``overload`` key: its tail latency is rejection-shaped and noisy, so
@@ -85,14 +88,16 @@ def _service(placement, mesh, params, n_rollouts: int, seed: int) -> QueryServic
     )
 
 
-def _sync_closed_loop(service: QueryService, workload, window: int) -> dict:
+def _sync_closed_loop(
+    service: QueryService, workload, window: int, strategy: str | None = None
+) -> dict:
     """The sync baseline at the same batch config: enqueue in windows of
     ``window`` requests, flush, repeat."""
     lat: list[float] = []
     t0 = time.perf_counter()
     for lo in range(0, len(workload), window):
         tickets = [
-            service.enqueue(wq.query, wq.starts)
+            service.enqueue(wq.query, wq.starts, strategy=strategy)
             for wq in workload[lo : lo + window]
         ]
         service.flush()
@@ -108,7 +113,8 @@ def _sync_closed_loop(service: QueryService, workload, window: int) -> dict:
 
 
 async def _open_loop(
-    service: QueryService, workload, rate_qps: float, seed: int
+    service: QueryService, workload, rate_qps: float, seed: int,
+    strategy: str | None = None,
 ) -> dict:
     """Fire the workload at Poisson arrivals of ``rate_qps``; the
     generator never waits for the server (open loop)."""
@@ -121,7 +127,10 @@ async def _open_loop(
         async def one(wq, tenant, slo):
             nonlocal failed
             try:
-                await aio.submit(wq.query, wq.starts, tenant=tenant, slo=slo)
+                await aio.submit(
+                    wq.query, wq.starts, tenant=tenant, slo=slo,
+                    strategy=strategy,
+                )
             except AdmissionRejected as e:
                 rejected[e.reason] += 1
             except Exception:  # noqa: BLE001 — count, keep the run alive
@@ -201,6 +210,54 @@ def _warm_restore(mesh, params, seed, path) -> dict:
     }
 
 
+def _uint32_stream(mesh, params, seed) -> dict:
+    """Stream-level goodput with the bitpacked uint32 tile store enabled,
+    f32 store as the control: the same open-loop Poisson stream (all-S2,
+    ``frontier_kernel_packed``) at each config's own matched sync rate,
+    recording goodput, rejection rate, and the staged tile-store bytes
+    the serving caches held.  Runs on a dedicated small twin for the same
+    reason as :func:`_warm_restore` — the 8000-node twin's interpret-mode
+    fused kernels would swamp the stream signal."""
+    g = generators.random_labeled_graph(96, 400, 4, seed=seed)
+    placement = distribute(g, n_sites=4, replication_rate=0.3, seed=seed)
+    workload = generate(
+        g,
+        WorkloadConfig(
+            n_queries=48, hot_pool=6, hot_fraction=0.8, max_starts=4,
+            seed=seed,
+        ),
+    )
+    out: dict[str, dict] = {}
+    for dt in ("f32", "uint32"):
+        svc = QueryService(
+            placement, mesh, params,
+            config=ServeConfig(
+                n_rollouts=30, seed=seed,
+                s2_backend="frontier_kernel_packed", s2_block_size=16,
+                s2_tile_dtype=dt,
+            ),
+        )
+        for wq in workload[:16]:  # warm: compile the hot signatures
+            svc.submit(wq.query, wq.starts, strategy="S2")
+        sync = _sync_closed_loop(svc, workload, 16, strategy="S2")
+        r = asyncio.run(
+            _open_loop(
+                svc, workload, sync["queries_per_sec"], seed, strategy="S2"
+            )
+        )
+        ts = svc.exec_cache.frontier_mem_stats()["tile_store"]
+        out[dt] = {
+            "goodput_qps": r["goodput_qps"],
+            "rejection_rate": r["rejection_rate"],
+            "tile_store_bytes": int(ts["bytes_by_dtype"][dt]),
+        }
+    out["tile_store_bytes_ratio"] = (
+        out["f32"]["tile_store_bytes"]
+        / max(out["uint32"]["tile_store_bytes"], 1)
+    )
+    return out
+
+
 def run(
     small: bool = True,
     n_queries: int = 144,
@@ -245,6 +302,7 @@ def run(
 
     restore = _warm_restore(mesh, params, seed, out + ".stage_a.tmp")
     os.unlink(out + ".stage_a.tmp")
+    u32_stream = _uint32_stream(mesh, params, seed)
 
     cfg = _aio_config()
     result = {
@@ -263,6 +321,10 @@ def run(
         # 2x offered: rejection-shaped tail, excluded from --regress
         "overload": overload,
         "warm_restore": restore,
+        # stream goodput with the bitpacked tile store (f32 control);
+        # goodput/bytes only — no p99_ms leaves, so the gate stays on
+        # the main sweep's tails
+        "uint32_stream": u32_stream,
         "n_rollouts": n_rollouts,
     }
     with open(out, "w") as f:
@@ -284,6 +346,19 @@ def run(
         f"serve_async,overload_latency_p99_ms,{overload['latency']['latency']['p99_ms']:.2f}"
     )
     rows.append(f"serve_async,warm_restore_pack_calls,{restore['pack_blocks_calls']}")
+    for dt in ("f32", "uint32"):
+        rows.append(
+            f"serve_async,{dt}_stream_goodput_qps,"
+            f"{u32_stream[dt]['goodput_qps']:.3f}"
+        )
+        rows.append(
+            f"serve_async,{dt}_stream_tile_bytes,"
+            f"{u32_stream[dt]['tile_store_bytes']}"
+        )
+    rows.append(
+        f"serve_async,stream_tile_bytes_ratio,"
+        f"{u32_stream['tile_store_bytes_ratio']:.1f}"
+    )
     rows.append(f"serve_async,json,{out}")
     return rows
 

@@ -9,7 +9,10 @@ placement)`` and shared by every automaton signature, both fused Pallas
 backends, and all sites:
 
 * staged global tile tensor — :func:`repro.kernels.frontier.ops.stage_graph`
-  (``backend="frontier_kernel"``),
+  (``backend="frontier_kernel"``), keyed by tile dtype (f32 or the
+  bitpacked uint32 store) and, under a ``tile_store_budget_bytes``,
+  backed by the byte-budgeted out-of-core :class:`_SlabCache` (cold
+  per-(direction, label) slabs spill to disk and reload on touch),
 * staged per-site tile slabs —
   :func:`repro.kernels.frontier.ops.stage_sharded_graph`
   (``backend="frontier_kernel_sharded"``: n_sites packings per build
@@ -42,6 +45,10 @@ arrays alive through its own closure and completes normally
 
 from __future__ import annotations
 
+import os
+import shutil
+import tempfile
+import weakref
 from collections import OrderedDict
 from typing import Any, Callable, Hashable
 
@@ -49,6 +56,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro.core.automaton import FWD, INV
 from repro.graph.partition import Placement
 from repro.graph.structure import LabeledGraph
 from repro.kernels.frontier import ops as fops
@@ -71,6 +79,140 @@ def label_degree_vectors(
         np.add.at(deg[s, :, 0], (g.lbl, g.src), 1.0)
         np.add.at(deg[s, :, 1], (g.lbl, g.dst), 1.0)
     return deg
+
+
+class _SlabCache:
+    """Byte-budgeted out-of-core Stage A for ONE (graph, block_size,
+    tile_dtype) triple: per-(direction, label) host slabs with touch
+    *heat* (touches since the cache was built — epoch bumps drop the
+    whole cache, so heat resets with the graph-stats epoch), spilled
+    coldest-first to an on-disk snapshot when resident bytes exceed
+    ``budget_bytes`` and transparently restored — or rebuilt straight
+    from the edge stream if the spill file is gone — on next touch.
+
+    Slabs are immutable once packed, so a spill file written once stays
+    valid for the cache's lifetime: re-spilling a reloaded slab only
+    drops the memory copy.  Spill writes are atomic (``mkstemp`` +
+    ``os.replace``, the :mod:`repro.serve.persist` discipline) and the
+    spill directory is removed when the cache is garbage-collected.
+
+    ``BUILD_COUNTERS["spills"/"reloads"]`` mirror the per-cache
+    counters, so tests can assert the out-of-core path was exercised."""
+
+    def __init__(
+        self,
+        graph: LabeledGraph,
+        block_size: int,
+        tile_dtype: str,
+        chunk_edges: int | None = None,
+    ):
+        self.graph = graph
+        self.block_size = block_size
+        self.tile_dtype = tile_dtype
+        self.chunk_edges = chunk_edges
+        self.budget_bytes: int | None = None
+        # key -> slab (tiles, rows, cols) resident in host memory, or
+        # None for a label/direction the graph has no edges for (those
+        # stay "resident" at zero bytes and are never spilled)
+        self._slabs: dict[tuple[int, int], tuple | None] = {}
+        self._heat: dict[tuple[int, int], int] = {}
+        self._spilled: dict[tuple[int, int], str] = {}
+        self.spills = 0
+        self.reloads = 0
+        self.staging_chunks = 0
+        self._dir = tempfile.mkdtemp(prefix="repro-tile-spill-")
+        self._cleanup = weakref.finalize(self, shutil.rmtree, self._dir, True)
+
+    @staticmethod
+    def _slab_nbytes(slab: tuple | None) -> int:
+        return int(slab[0].nbytes) if slab is not None else 0
+
+    def resident_bytes(self) -> int:
+        """Host bytes currently held by in-memory slab tiles."""
+        return sum(self._slab_nbytes(s) for s in self._slabs.values())
+
+    def resident_slabs(self) -> int:
+        return sum(1 for s in self._slabs.values() if s is not None)
+
+    def spilled_slabs(self) -> int:
+        return sum(1 for k in self._spilled if k not in self._slabs)
+
+    def _build(self, key: tuple[int, int]) -> tuple | None:
+        slab, n_chunks = fops.pack_label_store(
+            self.graph, key[0], key[1], self.block_size,
+            self.chunk_edges, self.tile_dtype,
+        )
+        self.staging_chunks += n_chunks
+        return slab
+
+    def _restore(self, key: tuple[int, int]) -> tuple | None:
+        path = self._spilled.get(key)
+        if path is not None and os.path.exists(path):
+            with np.load(path) as z:
+                slab = (z["tiles"], z["rows"], z["cols"])
+            self.reloads += 1
+            fops.BUILD_COUNTERS["reloads"] += 1
+            return slab
+        # never packed yet, or the spill file vanished: (re)build from
+        # the edge stream — chunked when the cache was configured so
+        return self._build(key)
+
+    def _spill(self, key: tuple[int, int]) -> None:
+        slab = self._slabs.pop(key)
+        if key not in self._spilled:
+            path = os.path.join(self._dir, f"slab_{key[0]}_{key[1]}.npz")
+            fd, tmp = tempfile.mkstemp(dir=self._dir, suffix=".tmp")
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, tiles=slab[0], rows=slab[1], cols=slab[2])
+            os.replace(tmp, path)  # atomic: never a torn spill file
+            self._spilled[key] = path
+        self.spills += 1
+        fops.BUILD_COUNTERS["spills"] += 1
+
+    def touch(self, keys: tuple[tuple[int, int], ...]) -> None:
+        """Bump heat and make every requested slab resident, then evict
+        the coldest non-requested slabs until the budget holds.  If the
+        requested set alone exceeds the budget it stays resident — a
+        single assembly is never split."""
+        for k in keys:
+            self._heat[k] = self._heat.get(k, 0) + 1
+            if k not in self._slabs:
+                self._slabs[k] = self._restore(k)
+        if self.budget_bytes is None:
+            return
+        resident = self.resident_bytes()
+        pinned = frozenset(keys)
+        victims = sorted(
+            (k for k, s in self._slabs.items() if s is not None and k not in pinned),
+            key=lambda k: self._heat.get(k, 0),
+        )
+        for k in victims:
+            if resident <= self.budget_bytes:
+                break
+            resident -= self._slab_nbytes(self._slabs[k])
+            self._spill(k)
+
+    def assemble(
+        self, keys: tuple[tuple[int, int], ...] | None = None
+    ) -> fops.StagedGraph:
+        """A :class:`~repro.kernels.frontier.ops.StagedGraph` covering
+        exactly ``keys`` (default: every (direction, label) plus the
+        any-label unions — the full store).  Each call concatenates the
+        requested host slabs behind a fresh cover tile; the result's
+        device tensor holds ONLY the requested subset, which is the
+        whole point of the budgeted store."""
+        if keys is None:
+            keys = tuple(
+                (d, lid)
+                for d in (FWD, INV)
+                for lid in (*range(self.graph.n_labels), fops.ANY_LABEL)
+            )
+        keys = tuple(sorted(set(keys)))
+        self.touch(keys)
+        stores = {k: self._slabs[k] for k in keys if self._slabs[k] is not None}
+        return fops.assemble_staged(
+            stores, self.graph.n_nodes, self.block_size, self.tile_dtype
+        )
 
 
 class GraphPlanStore:
@@ -130,21 +272,65 @@ class GraphPlanStore:
         block_size: int = 128,
         epoch: int = 0,
         chunk_edges: int | None = None,
+        tile_dtype: str = "f32",
+        budget_bytes: int | None = None,
+        keys: tuple[tuple[int, int], ...] | None = None,
     ) -> fops.StagedGraph:
-        """The global fused backend's staged tile tensor + offsets —
-        shared by BOTH frontier dtypes (the packed backend thresholds
-        the same f32 tiles in-kernel), so the cache key carries no dtype.
+        """The global fused backend's staged tile tensor + offsets.
+
+        Keyed by *tile dtype* (appended at the key's end so portable
+        snapshot keys carry it): the f32 and uint32 stores are distinct
+        tensors and cache independently; the frontier dtype does NOT
+        join the key — both frontier backends consume either store.
         ``chunk_edges`` streams the packing in bounded edge slices; the
         artifact is byte-identical to the one-shot path, so the key is
-        unchanged and a chunked build can warm an unchunked caller."""
+        unchanged and a chunked build can warm an unchunked caller.
+
+        ``budget_bytes`` switches to the **out-of-core** path: Stage A
+        becomes a :class:`_SlabCache` of per-(direction, label) host
+        slabs under that resident-byte budget (cold slabs spilled to
+        disk, reloaded or rebuilt from the edge stream on touch), and
+        the returned :class:`~repro.kernels.frontier.ops.StagedGraph`
+        is assembled from exactly ``keys`` (an automaton's
+        :func:`~repro.kernels.frontier.ops.required_offset_keys`;
+        ``None`` = every slab).  The assembled subset is NOT cached here
+        — executors hold it via closure (see
+        :class:`repro.serve.plancache.ExecutorCache`)."""
+        if budget_bytes is not None:
+            cache = self._slab_cache(graph, block_size, epoch, chunk_edges, tile_dtype)
+            cache.budget_bytes = int(budget_bytes)
+            before = cache.staging_chunks
+            staged = cache.assemble(keys)
+            self._staging_chunks += cache.staging_chunks - before
+            return staged
 
         def build() -> fops.StagedGraph:
-            staged = fops.stage_graph(graph, block_size, chunk_edges)
+            staged = fops.stage_graph(graph, block_size, chunk_edges, tile_dtype)
             self._staging_chunks += staged.staging_chunks
             return staged
 
-        key = ("staged_graph", id(graph), epoch, block_size)
+        key = ("staged_graph", id(graph), epoch, block_size, tile_dtype)
         return self._get(key, graph, epoch, build)
+
+    def _slab_cache(
+        self,
+        graph: LabeledGraph,
+        block_size: int,
+        epoch: int,
+        chunk_edges: int | None,
+        tile_dtype: str,
+    ) -> _SlabCache:
+        """The out-of-core slab cache backing budgeted staging — one per
+        (graph, block_size, tile_dtype); the budget is mutable state on
+        the cache (not part of the key) so a budget change re-uses the
+        already-packed slabs."""
+        key = ("slab_cache", id(graph), epoch, block_size, tile_dtype)
+        return self._get(
+            key,
+            graph,
+            epoch,
+            lambda: _SlabCache(graph, block_size, tile_dtype, chunk_edges),
+        )
 
     def local_graphs(self, placement: Placement, epoch: int = 0) -> list[LabeledGraph]:
         """Per-site site-local graph views of the placement."""
@@ -157,16 +343,23 @@ class GraphPlanStore:
         )
 
     def staged_sharded(
-        self, placement: Placement, block_size: int = 128, epoch: int = 0
+        self,
+        placement: Placement,
+        block_size: int = 128,
+        epoch: int = 0,
+        tile_dtype: str = "f32",
     ) -> fops.StagedShardedGraph:
-        """The sharded fused backend's per-site staged tile slabs."""
-        key = ("staged_sharded", id(placement), epoch, block_size)
+        """The sharded fused backend's per-site staged tile slabs (keyed
+        by tile dtype like :meth:`staged_graph`; the sharded path stages
+        whole placements, so it gets the dtype but not the byte budget —
+        see the kernels README's out-of-core scope note)."""
+        key = ("staged_sharded", id(placement), epoch, block_size, tile_dtype)
         return self._get(
             key,
             placement,
             epoch,
             lambda: fops.stage_sharded_graph(
-                self.local_graphs(placement, epoch), block_size
+                self.local_graphs(placement, epoch), block_size, tile_dtype
             ),
         )
 
@@ -176,19 +369,20 @@ class GraphPlanStore:
         block_size: int = 128,
         n_groups: int = 1,
         epoch: int = 0,
+        tile_dtype: str = "f32",
     ) -> fops.StagedShardedGraph:
         """Device-granular staging: each device's co-located sites merged
         into ONE deduplicated union slab (see
         :func:`repro.kernels.frontier.ops.merge_staged_sites`) — the
         sharded executor's expansion operand.  When every site has its
         own device this is the per-site staging itself (no copy)."""
-        key = ("staged_merged", id(placement), epoch, block_size, n_groups)
+        key = ("staged_merged", id(placement), epoch, block_size, n_groups, tile_dtype)
         return self._get(
             key,
             placement,
             epoch,
             lambda: fops.merge_staged_sites(
-                self.staged_sharded(placement, block_size, epoch), n_groups
+                self.staged_sharded(placement, block_size, epoch, tile_dtype), n_groups
             ),
         )
 
@@ -199,6 +393,7 @@ class GraphPlanStore:
         axis_size: int = 1,
         epoch: int = 0,
         floor: int = fops.BUCKET_FLOOR,
+        tile_dtype: str = "f32",
     ) -> fops.ShardedTileBuckets:
         """The sharded fused backend's Stage-A shape buckets: the
         device-granular merged slabs grouped into power-of-two tile
@@ -207,13 +402,16 @@ class GraphPlanStore:
         depends on how sites block over the mesh's site axes, but not on
         the automaton.  The resulting ``bucket_id`` joins the executor
         cache's graph key."""
-        key = ("tile_buckets", id(placement), epoch, block_size, axis_size, floor)
+        key = (
+            "tile_buckets", id(placement), epoch, block_size, axis_size, floor,
+            tile_dtype,
+        )
         return self._get(
             key,
             placement,
             epoch,
             lambda: fops.bucket_staged_sites(
-                self.staged_merged(placement, block_size, axis_size, epoch),
+                self.staged_merged(placement, block_size, axis_size, epoch, tile_dtype),
                 axis_size,
                 floor,
             ),
@@ -325,6 +523,36 @@ class GraphPlanStore:
         (kept out of :meth:`stats` — that dict's key set is a stable
         metrics schema)."""
         return self._staging_chunks
+
+    def tile_store_stats(self) -> dict:
+        """Staged tile-store accounting across every live entry: host/
+        device bytes per tile dtype (full stagings count their whole
+        tensor, slab caches their *resident* slabs) plus the out-of-core
+        spill/reload counters.  Entries are deduplicated by artifact
+        identity — ``staged_merged`` may alias ``staged_sharded`` when
+        every site has its own device."""
+        bytes_by_dtype = {d: 0 for d in fops.TILE_DTYPES}
+        slabs_resident = slabs_spilled = spills = reloads = 0
+        seen: set[int] = set()
+        for _, (_, v, _) in self._lru.items():
+            if id(v) in seen:
+                continue
+            seen.add(id(v))
+            if isinstance(v, _SlabCache):
+                bytes_by_dtype[v.tile_dtype] += v.resident_bytes()
+                slabs_resident += v.resident_slabs()
+                slabs_spilled += v.spilled_slabs()
+                spills += v.spills
+                reloads += v.reloads
+            elif isinstance(v, (fops.StagedGraph, fops.StagedShardedGraph)):
+                bytes_by_dtype[getattr(v, "tile_dtype", "f32")] += v.tile_store_bytes
+        return {
+            "bytes_by_dtype": bytes_by_dtype,
+            "slabs_resident": slabs_resident,
+            "slabs_spilled": slabs_spilled,
+            "spills": spills,
+            "reloads": reloads,
+        }
 
     def pad_stats(self) -> dict:
         return {

@@ -422,6 +422,8 @@ def make_s2_step_fn(
     stats_epoch: int = 0,
     bucket_floor: int | None = None,
     semantics: str = "pairs",
+    tile_dtype: str = "f32",
+    tile_store_budget_bytes: int | None = None,
 ):
     """Build the jitted batched S2 executor.
 
@@ -494,24 +496,47 @@ def make_s2_step_fn(
     at the start pair, +1 per expansion, ``INF_LEVEL`` when unreached.
     Answers and meters are unchanged; the levels are the implicit parent
     pointers :func:`repro.core.witness.reconstruct_path` walks.
+
+    ``tile_dtype="uint32"`` stages the bitpacked adjacency store (1/32
+    the Stage-A bytes; kernels dispatch on the staged dtype, so the same
+    plan shape serves both stores).  The bitpacked store is boolean-only:
+    ``semantics="witness"`` silently falls back to f32 staging — the
+    contracted store for discovery levels.  ``tile_store_budget_bytes``
+    turns on the out-of-core tile store for the two *global* fused
+    backends (requires ``plan_store``): Stage A assembles only the
+    automaton's required (direction, label) slabs under a resident-byte
+    budget, spilling cold slabs to disk (see
+    :meth:`repro.core.plans.GraphPlanStore.staged_graph`).  The sharded
+    backend honors the dtype but not the budget — its staging is
+    per-placement slabs, out of scope for the global budget.
     """
     if semantics not in ("pairs", "witness"):
         raise ValueError(f"semantics must be 'pairs' or 'witness', got {semantics!r}")
+    from repro.kernels.frontier.ref import TILE_DTYPES
+
+    if tile_dtype not in TILE_DTYPES:
+        raise ValueError(f"tile_dtype must be one of {TILE_DTYPES}, got {tile_dtype!r}")
+    # the bitpacked store carries no counts and no room for witness-level
+    # stamping contracts — witness semantics restages f32 (documented
+    # fallback; the ops-level fixpoint wrappers *refuse* instead)
+    eff_dtype = "f32" if semantics == "witness" else tile_dtype
     if backend == "frontier_kernel":
         return _make_frontier_step_fn(
             ca, n_nodes, max_levels, graph, replication_factor, block_size,
-            interpret, plan_store, stats_epoch, semantics,
+            interpret, plan_store, stats_epoch, semantics, eff_dtype,
+            tile_store_budget_bytes,
         )
     if backend == "frontier_kernel_packed":
         return _make_frontier_packed_step_fn(
             ca, n_nodes, max_levels, graph, replication_factor, block_size,
-            interpret, plan_store, stats_epoch, semantics,
+            interpret, plan_store, stats_epoch, semantics, eff_dtype,
+            tile_store_budget_bytes,
         )
     if backend == "frontier_kernel_sharded":
         return _make_frontier_sharded_step_fn(
             ca, n_nodes, mesh, site_axes, batch_axis, max_levels, placement,
             block_size, interpret, plan_store, stats_epoch, bucket_floor,
-            semantics,
+            semantics, eff_dtype,
         )
     if backend != "reference":
         raise ValueError(
@@ -662,6 +687,39 @@ def make_s2_step_fn(
     )
 
 
+def _fetch_staged_graph(
+    ca: CompiledAutomaton,
+    graph: LabeledGraph,
+    block_size: int,
+    plan_store,
+    stats_epoch: int,
+    tile_dtype: str,
+    budget_bytes: int | None,
+):
+    """Stage-A fetch shared by the two global fused builders: from the
+    plan store when one is passed (budgeted path assembles only the
+    automaton's required (direction, label) slabs), staged locally
+    otherwise.  The budget requires a store — the out-of-core slab cache
+    lives in the :class:`~repro.core.plans.GraphPlanStore`."""
+    from repro.kernels.frontier import ops as fops
+
+    if plan_store is not None:
+        if budget_bytes is not None:
+            return plan_store.staged_graph(
+                graph, block_size, epoch=stats_epoch, tile_dtype=tile_dtype,
+                budget_bytes=budget_bytes, keys=fops.required_offset_keys(ca),
+            )
+        return plan_store.staged_graph(
+            graph, block_size, epoch=stats_epoch, tile_dtype=tile_dtype
+        )
+    if budget_bytes is not None:
+        raise ValueError(
+            "tile_store_budget_bytes requires plan_store= (the out-of-core "
+            "slab cache lives in the GraphPlanStore)"
+        )
+    return fops.stage_graph(graph, block_size, tile_dtype=tile_dtype)
+
+
 def _make_frontier_step_fn(
     ca: CompiledAutomaton,
     n_nodes: int,
@@ -673,6 +731,8 @@ def _make_frontier_step_fn(
     plan_store=None,
     stats_epoch: int = 0,
     semantics: str = "pairs",
+    tile_dtype: str = "f32",
+    tile_store_budget_bytes: int | None = None,
 ):
     """The fused-Pallas S2 executor (``backend="frontier_kernel"``).
 
@@ -707,10 +767,9 @@ def _make_frontier_step_fn(
         raise ValueError(f"graph has {graph.n_nodes} nodes, executor built for {n_nodes}")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    staged = (
-        plan_store.staged_graph(graph, block_size, epoch=stats_epoch)
-        if plan_store is not None
-        else fops.stage_graph(graph, block_size)
+    staged = _fetch_staged_graph(
+        ca, graph, block_size, plan_store, stats_epoch, tile_dtype,
+        tile_store_budget_bytes,
     )
     plan = fops.build_level_schedule(ca, staged)
     n_states, q_pad, v_pad = ca.n_states, plan.q_pad, plan.v_pad
@@ -836,6 +895,8 @@ def _make_frontier_packed_step_fn(
     plan_store=None,
     stats_epoch: int = 0,
     semantics: str = "pairs",
+    tile_dtype: str = "f32",
+    tile_store_budget_bytes: int | None = None,
 ):
     """The bitpacked fused-Pallas S2 executor
     (``backend="frontier_kernel_packed"``).
@@ -873,10 +934,9 @@ def _make_frontier_packed_step_fn(
         raise ValueError(f"graph has {graph.n_nodes} nodes, executor built for {n_nodes}")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    staged = (
-        plan_store.staged_graph(graph, block_size, epoch=stats_epoch)
-        if plan_store is not None
-        else fops.stage_graph(graph, block_size)
+    staged = _fetch_staged_graph(
+        ca, graph, block_size, plan_store, stats_epoch, tile_dtype,
+        tile_store_budget_bytes,
     )
     plan = fops.build_level_schedule(ca, staged)
     n_states, q_pad, v_pad = ca.n_states, plan.q_pad, plan.v_pad
@@ -1063,6 +1123,7 @@ def _make_frontier_sharded_step_fn(
     stats_epoch: int = 0,
     bucket_floor: int | None = None,
     semantics: str = "pairs",
+    tile_dtype: str = "f32",
 ):
     """The site-sharded fused-Pallas S2 executor
     (``backend="frontier_kernel_sharded"``).
@@ -1158,14 +1219,15 @@ def _make_frontier_sharded_step_fn(
     if plan_store is not None:
         site_graphs = plan_store.local_graphs(placement, epoch=stats_epoch)
         exec_staged = plan_store.staged_merged(
-            placement, block_size, axis_size, epoch=stats_epoch
+            placement, block_size, axis_size, epoch=stats_epoch, tile_dtype=tile_dtype
         )
         tile_buckets = plan_store.tile_buckets(
-            placement, block_size, axis_size, epoch=stats_epoch, floor=bucket_floor
+            placement, block_size, axis_size, epoch=stats_epoch, floor=bucket_floor,
+            tile_dtype=tile_dtype,
         )
     else:
         site_graphs = [placement.local_graph(s) for s in range(placement.n_sites)]
-        staged = fops.stage_sharded_graph(site_graphs, block_size)
+        staged = fops.stage_sharded_graph(site_graphs, block_size, tile_dtype)
         exec_staged = fops.merge_staged_sites(staged, axis_size)
         tile_buckets = fops.bucket_staged_sites(exec_staged, axis_size, bucket_floor)
     plan = fops.build_sharded_level_schedule(
@@ -1412,6 +1474,8 @@ def s2_execute(
     stats_epoch: int = 0,
     bucket_floor: int | None = None,
     semantics: str = "pairs",
+    tile_dtype: str = "f32",
+    tile_store_budget_bytes: int | None = None,
 ) -> tuple[np.ndarray, list[StrategyCost]] | tuple[
     np.ndarray, list[StrategyCost], np.ndarray
 ]:
@@ -1472,6 +1536,8 @@ def s2_execute(
             block_size=block_size, interpret=interpret, placement=placement,
             plan_store=plan_store, stats_epoch=stats_epoch,
             bucket_floor=bucket_floor, semantics=semantics,
+            tile_dtype=tile_dtype,
+            tile_store_budget_bytes=tile_store_budget_bytes,
         )
     out = step_fn(
         jnp.asarray(arrays["src"]),

@@ -56,9 +56,20 @@ once and serves both dtypes).  Bit-exact on the boolean semiring: word
 bit q of ``out[r, j]`` is ``OR_v (f[r, v] bit q  AND  a[v, j])``.  The
 scalar-prefetch schedule (``firsts`` zero-init, ``valids`` early-out,
 sorted (o_row, o_col) steps) is shared verbatim with the f32 kernel.
+
+Both entry points also accept a **bitpacked tile store**: when
+``tiles`` is uint32 (n_tiles, B, ceil(B/32)) the dst axis is packed
+into bit-planes (``ref.pack_blocks(tile_dtype="uint32")`` — the same
+word layout as the frontier lanes) and the ``*_u32`` kernel variants
+unpack each tile's bits in-register.  The f32-frontier variant then
+runs the same MXU dot on the recovered {0,1} matrix; the packed-frontier
+variant is pure bitwise AND/OR end to end — no in-kernel f32 threshold,
+no popcounts — at 1/32 the tile-store HBM traffic per step.
 """
 
 from __future__ import annotations
+
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -135,6 +146,18 @@ def frontier_step_blocks(
     )(block_rows, block_cols, frontier, tiles)
 
 
+def _unpack_tile_bits(words: jax.Array, block_size: int) -> jax.Array:
+    """In-kernel inverse of the ``tile_dtype="uint32"`` bit-plane packing:
+    a (B, W) uint32 word block back to the (B, B) bool adjacency — dst
+    ``d`` is bit ``d % 32`` of word ``d // 32``.  Pure VPU shifts on an
+    iota, no gathers; the bit axis expands W words to W·32 columns and
+    the slice drops the pad when B is not a multiple of 32."""
+    b, w = words.shape
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (b, w, 32), 2)
+    bits = (words[:, :, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(b, w * 32)[:, :block_size] != 0
+
+
 def _fused_level_kernel(
     firsts_ref, valids_ref, tids_ref, frows_ref, fcols_ref, orows_ref, ocols_ref,
     f_ref, a_ref, o_ref,
@@ -162,6 +185,27 @@ def _fused_level_kernel(
         o_ref[...] += jnp.dot(f_ref[...], a_ref[0], preferred_element_type=jnp.float32)
 
 
+def _fused_level_kernel_u32(
+    firsts_ref, valids_ref, tids_ref, frows_ref, fcols_ref, orows_ref, ocols_ref,
+    f_ref, a_ref, o_ref, *, block_size,
+):
+    """:func:`_fused_level_kernel` against a bitpacked uint32 tile store:
+    the (1, B, W) word block unpacks to the (B, B) 0/1 adjacency
+    in-register (:func:`_unpack_tile_bits`) and the accumulation is the
+    same f32 MXU dot — counts and outputs are bit-exact vs the f32 tiles
+    because both store exactly the same {0,1} adjacency."""
+    i = pl.program_id(0)
+
+    @pl.when(firsts_ref[i] == 1)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(valids_ref[i] == 1)
+    def _accumulate():
+        a = _unpack_tile_bits(a_ref[0], block_size).astype(jnp.float32)
+        o_ref[...] += jnp.dot(f_ref[...], a, preferred_element_type=jnp.float32)
+
+
 def fused_level_blocks(
     frontier: jax.Array,  # (n_rows * q_pad, v_pad) f32 0/1 (union rows appended)
     tiles: jax.Array,  # (n_tiles, B, B) f32 0/1; index 0 is the zero cover tile
@@ -187,11 +231,22 @@ def fused_level_blocks(
     (default: the frontier height) sets the output height independently
     of the input, which may carry extra fan-in union rows.  Returns the
     raw count matrix (n_out_rows, v_pad); callers threshold >0.
+
+    ``tiles`` may be the f32 store (n_tiles, B, B) or the bitpacked
+    uint32 store (n_tiles, B, ceil(B/32)) — the kernel variant is picked
+    off the dtype and the packed tiles unpack in-register, so one
+    Stage-B schedule serves both tile stores.
     """
     n_rows, v_pad = frontier.shape
     if n_out_rows is None:
         n_out_rows = n_rows
     n_steps = tile_ids.shape[0]
+    packed_tiles = tiles.dtype == jnp.uint32
+    kernel = (
+        partial(_fused_level_kernel_u32, block_size=block_size)
+        if packed_tiles
+        else _fused_level_kernel
+    )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=7,
         grid=(n_steps,),
@@ -201,7 +256,7 @@ def fused_level_blocks(
                 lambda i, fi, vl, ti, fr, fc, orw, oc: (fr[i], fc[i]),
             ),
             pl.BlockSpec(
-                (1, block_size, block_size),
+                (1, block_size, int(tiles.shape[2])),
                 lambda i, fi, vl, ti, fr, fc, orw, oc: (ti[i], 0, 0),
             ),
         ],
@@ -211,7 +266,7 @@ def fused_level_blocks(
         ),
     )
     return pl.pallas_call(
-        _fused_level_kernel,
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_out_rows, v_pad), jnp.float32),
         interpret=interpret,
@@ -253,6 +308,32 @@ def _packed_level_kernel(
         )
 
 
+def _packed_level_kernel_u32(
+    firsts_ref, valids_ref, tids_ref, frows_ref, fcols_ref, orows_ref, ocols_ref,
+    f_ref, a_ref, o_ref, *, block_size,
+):
+    """The fully bitpacked inner step — packed frontier × packed tiles:
+    both operands are uint32 words, the adjacency bit-plane unpacks to a
+    bool mask in-register (:func:`_unpack_tile_bits`) and the product is
+    the same select + OR-reduce as :func:`_packed_level_kernel` — no f32
+    threshold anywhere in the step, popcount-free boolean algebra on the
+    VPU."""
+    i = pl.program_id(0)
+
+    @pl.when(firsts_ref[i] == 1)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(valids_ref[i] == 1)
+    def _accumulate():
+        f = f_ref[...]  # (q_pad, B) uint32 lane words
+        a = _unpack_tile_bits(a_ref[0], block_size)  # (B, B) bool
+        contrib = jnp.where(a[None, :, :], f[:, :, None], jnp.uint32(0))
+        o_ref[...] = o_ref[...] | jax.lax.reduce(
+            contrib, jnp.uint32(0), jax.lax.bitwise_or, (1,)
+        )
+
+
 def packed_level_blocks(
     frontier: jax.Array,  # (n_rows * q_pad, v_pad) uint32 lane words
     tiles: jax.Array,  # (n_tiles, B, B) f32 0/1 — the SAME Stage-A tensor
@@ -273,15 +354,23 @@ def packed_level_blocks(
     words instead of f32 rows (32× the lane density per row).
 
     Takes the SAME host-built schedule (``firsts``/``valids``/id arrays
-    from ``ops.build_level_schedule``) and the SAME staged f32 tile
-    tensor; only the frontier/output dtype and the per-step product
-    differ.  Returns the OR-accumulated word matrix (n_out_rows, v_pad)
-    uint32 — already boolean per bit, no thresholding needed.
+    from ``ops.build_level_schedule``) and either tile store: the staged
+    f32 tensor (thresholded to bool in-kernel) or the bitpacked uint32
+    store (unpacked from bit-planes in-kernel — the packed×packed step
+    is pure bitwise AND/OR, no f32 anywhere).  Returns the
+    OR-accumulated word matrix (n_out_rows, v_pad) uint32 — already
+    boolean per bit, no thresholding needed.
     """
     n_rows, v_pad = frontier.shape
     if n_out_rows is None:
         n_out_rows = n_rows
     n_steps = tile_ids.shape[0]
+    packed_tiles = tiles.dtype == jnp.uint32
+    kernel = (
+        partial(_packed_level_kernel_u32, block_size=block_size)
+        if packed_tiles
+        else _packed_level_kernel
+    )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=7,
         grid=(n_steps,),
@@ -291,7 +380,7 @@ def packed_level_blocks(
                 lambda i, fi, vl, ti, fr, fc, orw, oc: (fr[i], fc[i]),
             ),
             pl.BlockSpec(
-                (1, block_size, block_size),
+                (1, block_size, int(tiles.shape[2])),
                 lambda i, fi, vl, ti, fr, fc, orw, oc: (ti[i], 0, 0),
             ),
         ],
@@ -301,7 +390,7 @@ def packed_level_blocks(
         ),
     )
     return pl.pallas_call(
-        _packed_level_kernel,
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_out_rows, v_pad), jnp.uint32),
         interpret=interpret,

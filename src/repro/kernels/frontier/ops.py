@@ -83,7 +83,12 @@ from repro.kernels.frontier.frontier import (
     fused_level_blocks,
     packed_level_blocks,
 )
-from repro.kernels.frontier.ref import pack_blocks, pack_blocks_chunked
+from repro.kernels.frontier.ref import (
+    TILE_DTYPES,
+    pack_blocks,
+    pack_blocks_chunked,
+    tile_words,
+)
 
 # f32 sublane minimum: the row-tile rows one query would waste, used to
 # stack up to QPAD independent queries' frontiers per automaton state.
@@ -173,6 +178,22 @@ class StagedGraph:
     # total edge-list slices consumed by chunked Stage-A packing (0 when
     # the one-shot path packed every label store in one pass)
     staging_chunks: int = 0
+    # "f32" (dense 0/1 tiles, every semiring) or "uint32" (dst axis
+    # bitpacked into ceil(B/32) word planes — boolean semiring only, at
+    # 1/32 the staged bytes); see ``ref.pack_blocks``'s tile_dtype path
+    tile_dtype: str = "f32"
+
+    @property
+    def tile_store_bytes(self) -> int:
+        """Total staged tile-tensor bytes (cover tile included)."""
+        return int(np.asarray(self.tiles).nbytes)
+
+    def slab_bytes(self) -> dict[tuple[int, int], int]:
+        """Per-(direction, label) staged bytes — each slab's tile count
+        times the per-tile footprint of this store's dtype.  Derived
+        from the offset tables, so it costs nothing to carry."""
+        per_tile = self.tile_store_bytes // max(int(self.tiles.shape[0]), 1)
+        return {k: len(rows) * per_tile for k, (_, rows, _) in self.offsets.items()}
 
 
 def _union_store(
@@ -181,21 +202,28 @@ def _union_store(
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray] | None:
     """The any-label union store of one direction: the block-sparse
     saturated OR of every label store's tiles (an edge with any label is
-    an edge), so a wildcard grounds to ONE tile list instead of |labels|."""
+    an edge), so a wildcard grounds to ONE tile list instead of |labels|.
+
+    Bitpacked uint32 stores union with bitwise OR — ``np.maximum`` on
+    word values is NOT the set union of their bits."""
     acc: dict[tuple[int, int], np.ndarray] = {}
+    packed = False
     for (d, lid), (t, r, c) in stores.items():
         if d != direction or lid < 0:
             continue
+        packed = t.dtype == np.uint32
+        combine = np.bitwise_or if packed else np.maximum
         for j in range(t.shape[0]):
             key = (int(r[j]), int(c[j]))
             if key in acc:
-                acc[key] = np.maximum(acc[key], t[j])
+                acc[key] = combine(acc[key], t[j])
             else:
-                acc[key] = np.asarray(t[j], np.float32).copy()
+                acc[key] = np.asarray(t[j]).copy()
     if not acc:
         return None
     keys = sorted(acc, key=lambda rc: (rc[1], rc[0]))  # pack_blocks col order
-    tiles = np.minimum(np.stack([acc[k] for k in keys]), 1.0).astype(np.float32)
+    stack = np.stack([acc[k] for k in keys])
+    tiles = stack if packed else np.minimum(stack, 1.0).astype(np.float32)
     rows = np.asarray([k[0] for k in keys], np.int32)
     cols = np.asarray([k[1] for k in keys], np.int32)
     return tiles, rows, cols
@@ -205,6 +233,7 @@ def _label_tile_lists(
     source: LabeledGraph | BlockedGraph,
     block_size: int,
     chunk_edges: int | None = None,
+    tile_dtype: str = "f32",
 ) -> tuple[
     int, int, dict[tuple[int, int], tuple[np.ndarray, np.ndarray, np.ndarray]], int
 ]:
@@ -217,8 +246,15 @@ def _label_tile_lists(
     :func:`pack_blocks_chunked` (byte-identical tiles, peak transient
     host memory bounded by the chunk size); the last return value counts
     the edge-list slices consumed (0 on the one-shot path)."""
+    if tile_dtype not in TILE_DTYPES:
+        raise ValueError(f"tile_dtype must be one of {TILE_DTYPES}, got {tile_dtype!r}")
     staging_chunks = 0
     if isinstance(source, BlockedGraph):
+        if tile_dtype != "f32":
+            raise ValueError(
+                "a BlockedGraph carries pre-packed f32 tiles; stage from the "
+                "LabeledGraph to get a tile_dtype='uint32' store"
+            )
         stores = {}
         for direction, store in ((FWD, source.fwd), (INV, source.inv)):
             for lid, (t, r, c) in store.items():
@@ -233,18 +269,18 @@ def _label_tile_lists(
                 continue
             BUILD_COUNTERS["pack_blocks"] += 2
             if chunk_edges is None:
-                t, r, c, _ = pack_blocks(src, dst, g.n_nodes, block_size)
+                t, r, c, _ = pack_blocks(src, dst, g.n_nodes, block_size, tile_dtype)
                 stores[(FWD, lid)] = (t, r, c)
-                t, r, c, _ = pack_blocks(dst, src, g.n_nodes, block_size)
+                t, r, c, _ = pack_blocks(dst, src, g.n_nodes, block_size, tile_dtype)
                 stores[(INV, lid)] = (t, r, c)
             else:
                 t, r, c, _, nc = pack_blocks_chunked(
-                    src, dst, g.n_nodes, block_size, chunk_edges
+                    src, dst, g.n_nodes, block_size, chunk_edges, tile_dtype
                 )
                 stores[(FWD, lid)] = (t, r, c)
                 staging_chunks += nc
                 t, r, c, _, nc = pack_blocks_chunked(
-                    dst, src, g.n_nodes, block_size, chunk_edges
+                    dst, src, g.n_nodes, block_size, chunk_edges, tile_dtype
                 )
                 stores[(INV, lid)] = (t, r, c)
                 staging_chunks += nc
@@ -261,11 +297,16 @@ def _label_tile_lists(
 def _concat_stores(
     stores: dict[tuple[int, int], tuple[np.ndarray, np.ndarray, np.ndarray]],
     block_size: int,
+    tile_dtype: str = "f32",
 ) -> tuple[np.ndarray, dict[tuple[int, int], tuple[int, np.ndarray, np.ndarray]]]:
     """Concatenate label stores behind the zero cover tile (index 0) and
     record each store's base offset + block coordinates — the staging
     layout shared by the global and per-site Stage-A builders."""
-    tile_arrays = [np.zeros((1, block_size, block_size), np.float32)]
+    if tile_dtype == "uint32":
+        cover = np.zeros((1, block_size, tile_words(block_size)), np.uint32)
+    else:
+        cover = np.zeros((1, block_size, block_size), np.float32)
+    tile_arrays = [cover]
     offsets: dict[tuple[int, int], tuple[int, np.ndarray, np.ndarray]] = {}
     off = 1
     for key in sorted(stores):
@@ -280,6 +321,7 @@ def stage_graph(
     source: LabeledGraph | BlockedGraph,
     block_size: int = 128,
     chunk_edges: int | None = None,
+    tile_dtype: str = "f32",
 ) -> StagedGraph:
     """Stage A for the global fused backend: pack (if needed) and
     concatenate every label's tiles — plus the per-direction any-label
@@ -289,12 +331,13 @@ def stage_graph(
     (:func:`pack_blocks_chunked`): the staged tensor is byte-identical
     to the one-shot path, but the transient per-edge key/inverse arrays
     never exceed one chunk — the out-of-core knob for graphs whose edge
-    lists dwarf host RAM."""
+    lists dwarf host RAM.  ``tile_dtype="uint32"`` stages the bitpacked
+    store (1/32 the tensor bytes, boolean semiring only)."""
     BUILD_COUNTERS["stage_graph"] += 1
     n_nodes, v_pad, stores, staging_chunks = _label_tile_lists(
-        source, block_size, chunk_edges
+        source, block_size, chunk_edges, tile_dtype
     )
-    tiles, offsets = _concat_stores(stores, block_size)
+    tiles, offsets = _concat_stores(stores, block_size, tile_dtype)
     return StagedGraph(
         n_nodes=n_nodes,
         v_pad=v_pad,
@@ -302,6 +345,70 @@ def stage_graph(
         tiles=jnp.asarray(tiles),
         offsets=offsets,
         staging_chunks=staging_chunks,
+        tile_dtype=tile_dtype,
+    )
+
+
+def pack_label_store(
+    graph: LabeledGraph,
+    direction: int,
+    label_id: int,
+    block_size: int,
+    chunk_edges: int | None = None,
+    tile_dtype: str = "f32",
+) -> tuple[tuple[np.ndarray, np.ndarray, np.ndarray] | None, int]:
+    """Pack ONE (direction, label) slab straight from the edge stream —
+    the out-of-core tile store's build/rebuild unit (see
+    :meth:`repro.core.plans.GraphPlanStore.staged_graph`).
+
+    ``label_id == ANY_LABEL`` packs every edge of the direction; that is
+    byte-identical to the ``_union_store`` full staging produces, because
+    both sort blocks by (col, row) and store binary presence — an edge
+    with any label is an edge.  Returns ``(slab | None, n_chunks)``;
+    ``None`` when the graph has no matching edges (full staging omits
+    the offset key for such labels too)."""
+    if label_id == ANY_LABEL:
+        src, dst = graph.src, graph.dst
+    else:
+        src, dst = graph.edges_with_label(label_id)
+    if direction == INV:
+        src, dst = dst, src
+    if len(src) == 0:
+        return None, 0
+    BUILD_COUNTERS["pack_blocks"] += 1
+    if chunk_edges is None:
+        t, r, c, _ = pack_blocks(src, dst, graph.n_nodes, block_size, tile_dtype)
+        return (t, r, c), 0
+    t, r, c, _, nc = pack_blocks_chunked(
+        src, dst, graph.n_nodes, block_size, chunk_edges, tile_dtype
+    )
+    BUILD_COUNTERS["staging_chunks"] += nc
+    return (t, r, c), nc
+
+
+def assemble_staged(
+    stores: dict[tuple[int, int], tuple[np.ndarray, np.ndarray, np.ndarray]],
+    n_nodes: int,
+    block_size: int,
+    tile_dtype: str = "f32",
+    staging_chunks: int = 0,
+) -> StagedGraph:
+    """Build a :class:`StagedGraph` from already-packed host slabs — the
+    label-subset assembly path of the byte-budgeted tile store.  Packs
+    nothing (slabs come from :func:`pack_label_store` or a spill file);
+    a schedule built against the subset sees exactly the offset keys in
+    ``stores``, so the requested keys must cover the automaton's
+    :func:`required_offset_keys`."""
+    tiles, offsets = _concat_stores(stores, block_size, tile_dtype)
+    v_pad = -(-n_nodes // block_size) * block_size
+    return StagedGraph(
+        n_nodes=n_nodes,
+        v_pad=v_pad,
+        block_size=block_size,
+        tiles=jnp.asarray(tiles),
+        offsets=offsets,
+        staging_chunks=staging_chunks,
+        tile_dtype=tile_dtype,
     )
 
 
@@ -321,14 +428,20 @@ class StagedShardedGraph:
     block_size: int
     site_tiles: tuple[np.ndarray, ...]  # per site: (n_tiles_s, B, B) f32
     site_offsets: tuple[dict[tuple[int, int], tuple[int, np.ndarray, np.ndarray]], ...]
+    tile_dtype: str = "f32"  # see StagedGraph.tile_dtype
 
     @property
     def site_n_tiles(self) -> tuple[int, ...]:
         return tuple(int(t.shape[0]) for t in self.site_tiles)
 
+    @property
+    def tile_store_bytes(self) -> int:
+        """Total staged bytes across every site slab."""
+        return int(sum(np.asarray(t).nbytes for t in self.site_tiles))
+
 
 def stage_sharded_graph(
-    site_graphs: list[LabeledGraph], block_size: int = 128
+    site_graphs: list[LabeledGraph], block_size: int = 128, tile_dtype: str = "f32"
 ) -> StagedShardedGraph:
     """Stage A per site: each site's tile lists come from *its own* edge
     partition (replication included), kept at the site's natural size —
@@ -347,8 +460,8 @@ def stage_sharded_graph(
     BUILD_COUNTERS["stage_sharded_graph"] += 1
     site_tiles, site_offsets = [], []
     for g in site_graphs:
-        _, _, stores, _ = _label_tile_lists(g, block_size)
-        t, offsets = _concat_stores(stores, block_size)
+        _, _, stores, _ = _label_tile_lists(g, block_size, tile_dtype=tile_dtype)
+        t, offsets = _concat_stores(stores, block_size, tile_dtype)
         site_tiles.append(t)
         site_offsets.append(offsets)
     v_pad = -(-n_nodes // block_size) * block_size
@@ -359,6 +472,7 @@ def stage_sharded_graph(
         block_size=block_size,
         site_tiles=tuple(site_tiles),
         site_offsets=tuple(site_offsets),
+        tile_dtype=tile_dtype,
     )
 
 
@@ -385,6 +499,9 @@ def merge_staged_sites(
     if k == 1:
         return staged
     BUILD_COUNTERS["merge_staged_sites"] += 1
+    # uint32 word tiles union with bitwise OR (max on word values is not
+    # the union of their bit sets); f32 0/1 tiles keep the max form
+    combine = np.bitwise_or if staged.tile_dtype == "uint32" else np.maximum
     site_tiles, site_offsets = [], []
     for d in range(n_groups):
         acc: dict[tuple[int, int], dict[tuple[int, int], np.ndarray]] = {}
@@ -396,7 +513,7 @@ def merge_staged_sites(
                     rc = (int(rows[j]), int(cols[j]))
                     t = slab[base + j]
                     cur[rc] = (
-                        np.maximum(cur[rc], t) if rc in cur else np.asarray(t).copy()
+                        combine(cur[rc], t) if rc in cur else np.asarray(t).copy()
                     )
         stores = {}
         for key, tilemap in acc.items():
@@ -406,7 +523,7 @@ def merge_staged_sites(
                 np.asarray([rc[0] for rc in rcs], np.int32),
                 np.asarray([rc[1] for rc in rcs], np.int32),
             )
-        t, offsets = _concat_stores(stores, staged.block_size)
+        t, offsets = _concat_stores(stores, staged.block_size, staged.tile_dtype)
         site_tiles.append(t)
         site_offsets.append(offsets)
     return StagedShardedGraph(
@@ -416,6 +533,7 @@ def merge_staged_sites(
         block_size=staged.block_size,
         site_tiles=tuple(site_tiles),
         site_offsets=tuple(site_offsets),
+        tile_dtype=staged.tile_dtype,
     )
 
 
@@ -502,7 +620,9 @@ def bucket_staged_sites(
         )
         if len(sites) == 1:  # nothing to unify: natural shape, no roundup
             cls = n_tiles[sites[0]]
-        stack = np.zeros((len(sites), cls, b, b), np.float32)
+        width = b if staged.tile_dtype != "uint32" else tile_words(b)
+        dtype = np.float32 if staged.tile_dtype != "uint32" else np.uint32
+        stack = np.zeros((len(sites), cls, b, width), dtype)
         for row, s in enumerate(sites):
             stack[row, : n_tiles[s]] = staged.site_tiles[s]
         buckets.append(
@@ -658,6 +778,23 @@ class FusedLevelPlan:
     f_cols: jnp.ndarray  # (n_steps,) int32: tile block row
     o_rows: jnp.ndarray  # (n_steps,) int32: dst automaton state
     o_cols: jnp.ndarray  # (n_steps,) int32: tile block col
+    # dtype of the aliased tile store ("f32" or "uint32") — the kernels
+    # dispatch off the array dtype; the field gates the f32-only
+    # semirings (witness levels, counting) at the wrapper layer
+    tile_dtype: str = "f32"
+
+
+def required_offset_keys(ca: CompiledAutomaton) -> tuple[tuple[int, int], ...]:
+    """The (direction, label) slab keys a Stage-B schedule for ``ca``
+    reads: real labels stay themselves, wildcard transitions ground to
+    the per-direction ``ANY_LABEL`` union store.  This is the label
+    subset an out-of-core Stage A must have resident to serve ``ca``
+    (see ``repro.core.plans.GraphPlanStore``'s byte-budgeted store)."""
+    keys = {
+        (t.direction, t.label_id if t.label_id >= 0 else ANY_LABEL)
+        for t in ca.transitions
+    }
+    return tuple(sorted(keys))
 
 
 def _schedule_steps(
@@ -733,6 +870,7 @@ def build_level_schedule(
         f_cols=jnp.asarray(arr[:, 3]),
         o_rows=jnp.asarray(arr[:, 0]),
         o_cols=jnp.asarray(arr[:, 1]),
+        tile_dtype=staged.tile_dtype,
     )
 
 
@@ -815,6 +953,7 @@ class ShardedLevelPlan:
     n_real_steps: tuple[int, ...]  # per site: steps carrying a real tile
     useful_steps: int  # Σ per-site unpadded schedule lengths
     padded_steps: int  # Σ per-bucket rows × n_steps (executed grid slots)
+    tile_dtype: str = "f32"  # dtype of the aliased bucket tile stacks
 
     @property
     def pad_waste_ratio(self) -> float:
@@ -912,6 +1051,7 @@ def build_sharded_level_schedule(
         n_real_steps=tuple(n_real for _, _, _, n_real in site_steps),
         useful_steps=useful,
         padded_steps=padded,
+        tile_dtype=staged.tile_dtype,
     )
 
 
@@ -1067,6 +1207,20 @@ def _reach_fixpoint_levels(
     return visited, levels
 
 
+def _require_f32_tiles(plan: FusedLevelPlan, what: str) -> None:
+    """The uint32 tile store carries one boolean bit per edge slot — a
+    contract the witness-level and counting entry points refuse rather
+    than silently extend: callers wanting those semirings restage at
+    ``tile_dtype="f32"`` (the serve layer's witness fallback does exactly
+    that — see ``repro.core.strategies``)."""
+    if getattr(plan, "tile_dtype", "f32") != "f32":
+        raise ValueError(
+            f"{what} requires the f32 tile store; this plan aliases the "
+            f"boolean-only tile_dtype={plan.tile_dtype!r} staging — restage "
+            "with tile_dtype='f32' or use the boolean fixpoints"
+        )
+
+
 def reach_fixpoint_levels(
     plan: FusedLevelPlan,
     frontier0: jnp.ndarray,  # (n_states * q_pad, v_pad) f32 0/1
@@ -1074,7 +1228,9 @@ def reach_fixpoint_levels(
     interpret: bool = True,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """:func:`reach_fixpoint` + BFS discovery levels (same layout, f32,
-    ``INF_LEVEL`` = unreached) for host-side witness reconstruction."""
+    ``INF_LEVEL`` = unreached) for host-side witness reconstruction.
+    Refuses a ``tile_dtype="uint32"`` plan (boolean-only store)."""
+    _require_f32_tiles(plan, "reach_fixpoint_levels")
     return _reach_fixpoint_levels(
         frontier0, plan.tiles, plan.firsts, plan.valids, plan.tile_ids,
         plan.f_rows, plan.f_cols, plan.o_rows, plan.o_cols,
@@ -1139,7 +1295,9 @@ def count_paths_bounded(
     length accordingly), and wildcard transitions ride the saturated
     any-label union store, so a wildcard hop counts parallel edges that
     carry different labels once, not per label — match the oracle on
-    wildcard-free automata."""
+    wildcard-free automata.  Refuses a ``tile_dtype="uint32"`` plan
+    (the counting semiring is contracted to the f32 store)."""
+    _require_f32_tiles(plan, "count_paths_bounded")
     return _count_paths_bounded(
         frontier0, plan.tiles, plan.firsts, plan.valids, plan.tile_ids,
         plan.f_rows, plan.f_cols, plan.o_rows, plan.o_cols,
@@ -1405,7 +1563,9 @@ def reach_fixpoint_packed_levels(
     """:func:`reach_fixpoint_packed` + per-lane discovery levels:
     returns (visited lane words, levels) where levels is (n_states,
     QPACK, v_pad) f32 — lane q of word row ``q // 32``, bit ``q % 32``
-    unpacks to level row q."""
+    unpacks to level row q.  Refuses a ``tile_dtype="uint32"`` plan
+    (witness levels are contracted to the f32 store)."""
+    _require_f32_tiles(plan, "reach_fixpoint_packed_levels")
     return _reach_fixpoint_packed_levels(
         frontier0, plan.tiles, plan.firsts, plan.valids, plan.tile_ids,
         plan.f_rows, plan.f_cols, plan.o_rows, plan.o_cols,

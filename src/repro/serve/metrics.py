@@ -161,14 +161,25 @@ def _empty_frontier_mem_stats() -> dict:
     # counts, frontier bytes one fixpoint chunk carries per cached
     # executor ("f32" = frontier_kernel/_sharded rows, "packed" =
     # frontier_kernel_packed lane words — same bytes, 32x the lanes),
-    # query-lane capacity per chunk, and how many edge slices chunked
-    # Stage-A staging has consumed
+    # query-lane capacity per chunk, how many edge slices chunked
+    # Stage-A staging has consumed, and the staged *tile-store* block
+    # (GraphPlanStore.tile_store_stats(): bytes per tile dtype across
+    # every live Stage-A entry — the dominant tensor — plus the
+    # out-of-core slab counters: resident/spilled slab counts and the
+    # cumulative spill/reload events)
     return {
         "executors": {"f32": 0, "packed": 0},
         "frontier_bytes": {"f32": 0, "packed": 0},
         "lane_capacity": {"f32": 0, "packed": 0},
         "bytes_per_lane": {"f32": 0.0, "packed": 0.0},
         "staging_chunks": 0,
+        "tile_store": {
+            "bytes_by_dtype": {"f32": 0, "uint32": 0},
+            "slabs_resident": 0,
+            "slabs_spilled": 0,
+            "spills": 0,
+            "reloads": 0,
+        },
     }
 
 

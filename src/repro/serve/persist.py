@@ -99,6 +99,7 @@ def _encode(kind: str, artifact: Any) -> dict:
         return {
             "n_nodes": sg.n_nodes, "v_pad": sg.v_pad, "block_size": sg.block_size,
             "tiles": np.asarray(sg.tiles), "offsets": _encode_offsets(sg.offsets),
+            "tile_dtype": sg.tile_dtype,
         }
     if kind == "staged_sharded":
         ss: fops.StagedShardedGraph = artifact
@@ -107,17 +108,21 @@ def _encode(kind: str, artifact: Any) -> dict:
             "block_size": ss.block_size,
             "site_tiles": [np.asarray(t) for t in ss.site_tiles],
             "site_offsets": [_encode_offsets(o) for o in ss.site_offsets],
+            "tile_dtype": ss.tile_dtype,
         }
     raise ValueError(f"unpersistable Stage-A kind {kind!r}")
 
 
 def _decode(kind: str, payload: dict) -> Any:
+    # tile_dtype was added with the bitpacked store; snapshots written
+    # before it carry (implicitly f32) dense tiles
     if kind == "staged_graph":
         return fops.StagedGraph(
             n_nodes=payload["n_nodes"], v_pad=payload["v_pad"],
             block_size=payload["block_size"],
             tiles=jnp.asarray(payload["tiles"]),
             offsets=dict(payload["offsets"]),
+            tile_dtype=payload.get("tile_dtype", "f32"),
         )
     if kind == "staged_sharded":
         return fops.StagedShardedGraph(
@@ -125,6 +130,7 @@ def _decode(kind: str, payload: dict) -> Any:
             v_pad=payload["v_pad"], block_size=payload["block_size"],
             site_tiles=tuple(np.asarray(t) for t in payload["site_tiles"]),
             site_offsets=tuple(dict(o) for o in payload["site_offsets"]),
+            tile_dtype=payload.get("tile_dtype", "f32"),
         )
     raise ValueError(f"unpersistable Stage-A kind {kind!r}")
 

@@ -231,16 +231,22 @@ def automaton_signature(
     backend: str = "reference",
     block_size: int = 128,
     semantics: str = "pairs",
+    tile_dtype: str = "f32",
 ) -> tuple:
     """Structural identity of a compiled S2 executor.
 
     Everything :func:`~repro.core.strategies.make_s2_step_fn` closes over:
     the fused transition runs, start/accepting states, node count, the
     mesh/axis configuration, the backend (+ its tile block size for
-    the fused frontier-kernel backend), and the answer semantics
-    (``"pairs"`` vs ``"witness"`` executors trace different carries).
-    Two queries with equal signatures produce byte-identical step
-    functions and therefore share one jit cache.
+    the fused frontier-kernel backend), the answer semantics
+    (``"pairs"`` vs ``"witness"`` executors trace different carries),
+    and the staged tile dtype (f32 vs the bitpacked uint32 store bake
+    different tile tensors into the jitted program).  The out-of-core
+    ``tile_store_budget_bytes`` is deliberately NOT part of the
+    signature: it changes where Stage A's bytes live, never the staged
+    values an executor closes over.  Two queries with equal signatures
+    produce byte-identical step functions and therefore share one jit
+    cache.
 
     New fields append at the END: consumers index positionally
     (``frontier_mem_stats`` reads sig[0]/sig[4]/sig[9]/sig[10]).
@@ -259,6 +265,7 @@ def automaton_signature(
         backend,
         block_size,
         semantics,
+        tile_dtype,
     )
 
 
@@ -354,12 +361,15 @@ class ExecutorCache:
         stats_epoch: int = 0,
         bucket_floor: int | None = None,
         semantics: str = "pairs",
+        tile_dtype: str = "f32",
+        tile_store_budget_bytes: int | None = None,
     ) -> tuple[tuple, Callable]:
         """``signature`` accepts the precomputed key (the service computes
         it once per request during planning) to skip re-deriving the
         transition runs here.  The backend extras (``graph``,
         ``replication_factor``, ``block_size``, ``interpret``,
-        ``placement``, ``bucket_floor``) are only consulted by the fused
+        ``placement``, ``bucket_floor``, ``tile_dtype``,
+        ``tile_store_budget_bytes``) are only consulted by the fused
         ``frontier_kernel``/``frontier_kernel_sharded`` backends;
         ``stats_epoch`` scopes the Stage-A artifacts the build reuses."""
         sig = (
@@ -367,7 +377,7 @@ class ExecutorCache:
             if signature is not None
             else automaton_signature(
                 ca, n_nodes, mesh, site_axes, batch_axis, max_levels, backend,
-                block_size, semantics,
+                block_size, semantics, tile_dtype,
             )
         )
         bucket_id = None
@@ -381,8 +391,10 @@ class ExecutorCache:
             axis_size = 1
             for ax in site_axes:
                 axis_size *= int(mesh.shape[ax])
+            eff_dtype = "f32" if semantics == "witness" else tile_dtype
             bucket_id = self.plan_store.tile_buckets(
-                placement, block_size, axis_size, epoch=stats_epoch, floor=floor
+                placement, block_size, axis_size, epoch=stats_epoch, floor=floor,
+                tile_dtype=eff_dtype,
             ).bucket_id
         gkey = self.graph_key(
             stats_epoch, backend, block_size, graph, placement, bucket_id
@@ -400,6 +412,8 @@ class ExecutorCache:
             block_size=block_size, interpret=interpret, placement=placement,
             plan_store=self.plan_store, stats_epoch=stats_epoch,
             bucket_floor=bucket_floor, semantics=semantics,
+            tile_dtype=tile_dtype,
+            tile_store_budget_bytes=tile_store_budget_bytes,
         )
         self._lru[key] = _ExecEntry(
             graph_key=gkey, sig=sig, fn=fn,
@@ -452,7 +466,12 @@ class ExecutorCache:
         f32 rows hold 8 query lanes per chunk, packed uint32 lane words
         hold 256 — so ``bytes_per_lane`` is the roofline the dtypes
         actually differ on (32×).  The ``staging_chunks`` counter comes
-        from the shared plan store's chunked Stage-A accounting."""
+        from the shared plan store's chunked Stage-A accounting, and the
+        ``tile_store`` block is the store's staged-tile byte roofline —
+        bytes per tile dtype over every live Stage-A entry (full
+        stagings and budgeted slab caches alike) plus the out-of-core
+        spill/reload counters — the *dominant* tensor the frontier
+        numbers above ride next to."""
         from repro.kernels.frontier import ops as fops
 
         out = metrics._empty_frontier_mem_stats()
@@ -476,4 +495,5 @@ class ExecutorCache:
                 out["frontier_bytes"][dtype] / lanes if lanes else 0.0
             )
         out["staging_chunks"] = self.plan_store.staging_chunks
+        out["tile_store"] = self.plan_store.tile_store_stats()
         return out

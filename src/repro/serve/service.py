@@ -80,6 +80,18 @@ class ServeConfig:
     # tile block size below
     s2_backend: str = "reference"
     s2_block_size: int = 128
+    # staged adjacency tile-store dtype for the fused backends: "f32"
+    # (dense 0/1 tiles, every semiring) or "uint32" (dst axis bitpacked
+    # into word planes — 1/32 the Stage-A bytes, boolean answers only;
+    # witness requests transparently restage f32).  With
+    # tile_store_budget_bytes set, Stage A goes out-of-core on the
+    # global fused backends: only each automaton's required
+    # (direction, label) slabs are assembled on device, and cold slabs
+    # beyond the resident-byte budget spill to disk (reloaded — or
+    # rebuilt from the edge stream — on next touch); see
+    # repro.core.plans.GraphPlanStore.staged_graph
+    s2_tile_dtype: str = "f32"
+    tile_store_budget_bytes: int | None = None
     # smallest power-of-two shape class for the sharded backend's
     # bucketed grids (see repro.kernels.frontier.ops.BUCKET_FLOOR)
     s2_bucket_floor: int = 8
@@ -391,12 +403,17 @@ class QueryService:
                 key=key, ast=req.ast, ca=ca, estimates=est,
                 fkey=feedback.label_class_key(req.ast),
                 label_mask=strategies.query_label_mask(req.ast, self.placement.graph),
-                sig=plancache.automaton_signature(*sig_args, semantics="pairs"),
+                sig=plancache.automaton_signature(
+                    *sig_args, semantics="pairs", tile_dtype=cfg.s2_tile_dtype
+                ),
                 exec_ca=exec_ca,
                 exec_max_levels=exec_levels,
                 query_class=qc,
+                # witness executors restage f32 whatever the configured
+                # tile dtype (the bitpacked store is boolean-only), so
+                # their signature carries the dtype they actually bake
                 sig_witness=plancache.automaton_signature(
-                    *sig_args, semantics="witness"
+                    *sig_args, semantics="witness", tile_dtype="f32"
                 ),
             )
             self.plan_cache.put(key, self.stats_epoch, entry)
@@ -467,6 +484,8 @@ class QueryService:
                     stats_epoch=self.stats_epoch,
                     bucket_floor=cfg.s2_bucket_floor,
                     semantics=g_sem,
+                    tile_dtype=cfg.s2_tile_dtype,
+                    tile_store_budget_bytes=cfg.tile_store_budget_bytes,
                 )
 
                 def execute(starts, exemplar):

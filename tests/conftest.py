@@ -3,7 +3,7 @@ dry-run forces 512 devices in its own process, never here), and fail any
 single test that runs longer than REPRO_TEST_TIMEOUT seconds.
 
 The timeout is SIGALRM-based (pytest-timeout is not in the image —
-re-checked PR 9, 2026-08, still absent, so the hook stays): the
+re-checked PR 10, 2026-08, still absent, so the hook stays): the
 alarm raises in the main thread at the next bytecode boundary, which
 catches the retracing/driver-level hangs this repo has actually had.  A
 test stuck inside one long-running C call is covered by the coarser
